@@ -1,0 +1,54 @@
+"""Paper Table 3 (reduced scale): FGSM robustness of the Neural ODE vs the
+ResNet sharing the same f, and cross-solver attack transfer — the attack
+gradient is derived with one solver, inference runs another (possible only
+because the continuous model is solver-invariant)."""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "examples")
+
+from .common import Row
+
+EPS = (0.1, 0.3)
+ATTACK_SOLVERS = (("alf", 4), ("rk4", 4))
+INFER_SOLVERS = (("alf", 4), ("euler", 8), ("dopri5", 4))
+
+
+def run() -> List[Row]:
+    from image_recognition import (accuracy, forward, init_params, make_data,
+                                   train)
+    rows: List[Row] = []
+    x, y = make_data(2048, seed=0)
+    xt, yt = make_data(1024, seed=1)
+    p0 = init_params(jax.random.PRNGKey(0))
+    res, _ = train(p0, x, y, "resnet", 400)
+    node, _ = train(p0, x, y, "node", 400)
+
+    def fgsm(params, xx, yy, eps, mode, **kw):
+        def loss(xi):
+            logp = jax.nn.log_softmax(forward(params, xi, mode, **kw))
+            return -jnp.take_along_axis(logp, yy[:, None], 1).mean()
+
+        g = jax.grad(loss)(xx)
+        return xx + eps * jnp.sign(g)
+
+    for eps in EPS:
+        x_adv_res = fgsm(res, xt, yt, eps, "resnet")
+        a = accuracy(res, x_adv_res, yt, "resnet")
+        rows.append((f"fgsm/resnet/eps={eps}", a, "white-box"))
+
+        for a_solver, a_n in ATTACK_SOLVERS:
+            x_adv = fgsm(node, xt, yt, eps, "node",
+                         solver=a_solver, n_steps=a_n)
+            for i_solver, i_n in INFER_SOLVERS:
+                acc = accuracy(node, x_adv, yt, "node",
+                               solver=i_solver, n_steps=i_n)
+                rows.append(
+                    (f"fgsm/node/eps={eps}/attack={a_solver}/infer={i_solver}",
+                     acc, "paper Table 3 cross-solver cell"))
+    return rows

@@ -1,0 +1,103 @@
+"""Shared benchmark utilities: timing, CSV row emission, tiny problems."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]   # (name, value, derived/notes)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (CPU; relative numbers)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def print_rows(rows: Iterable[Row]) -> None:
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+
+
+# --- the paper's §4.1 toy problem (analytic gradients) ---------------------
+# alpha=0.5 keeps e^{2*alpha*T} inside f32 range out to the paper's T=20
+# (the paper plots the same sweep; fp64 there, fp32 here).
+
+ALPHA, Z0 = 0.5, 1.0
+
+
+def toy_f(params, z, t):
+    return params["alpha"] * z
+
+
+def toy_exact(T: float):
+    L = (Z0 * math.exp(ALPHA * T)) ** 2
+    dz0 = 2 * Z0 * math.exp(2 * ALPHA * T)
+    dalpha = 2 * T * Z0 ** 2 * math.exp(2 * ALPHA * T)
+    return L, dz0, dalpha
+
+
+# --- two-spirals toy classification (for solver-invariance / speed) --------
+
+def spirals(n: int = 512, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n2 = n // 2
+    theta = np.sqrt(rng.uniform(0, 1, n2)) * 3 * np.pi
+    r = theta / (3 * np.pi)
+    x0 = np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
+    x1 = -x0
+    x = np.concatenate([x0, x1]) + rng.normal(0, 0.02, (n, 2))
+    y = np.concatenate([np.zeros(n2), np.ones(n2)]).astype(np.int32)
+    perm = rng.permutation(n)
+    return jnp.asarray(x[perm], jnp.float32), jnp.asarray(y[perm])
+
+
+def mlp_field_init(key, d_hidden: int = 32, d: int = 2):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": 0.5 * jax.random.normal(k1, (d + 1, d_hidden)),
+        "b1": jnp.zeros((d_hidden,)),
+        "w2": 0.5 * jax.random.normal(k2, (d_hidden, d)),
+        "b2": jnp.zeros((d,)),
+    }
+
+
+def mlp_field(params, z, t):
+    """Concatenate-time MLP vector field (the usual Neural-ODE toy f)."""
+    t_col = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    h = jnp.tanh(jnp.concatenate([z, t_col], -1) @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def adam_train(loss_fn, params, steps: int = 1000, lr: float = 5e-3):
+    """Minimal Adam loop for the toy benchmarks/examples."""
+    tm = jax.tree_util.tree_map
+    m = tm(jnp.zeros_like, params)
+    v = tm(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(carry, i):
+        p, m, v = carry
+        l, g = jax.value_and_grad(loss_fn)(p)
+        m = tm(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = tm(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1.0
+        mhat = tm(lambda a: a / (1 - 0.9 ** t), m)
+        vhat = tm(lambda a: a / (1 - 0.999 ** t), v)
+        p = tm(lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + 1e-8),
+               p, mhat, vhat)
+        return (p, m, v), l
+
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, m, v), jnp.arange(steps, dtype=jnp.float32))
+    return params, float(losses[-1])

@@ -1,0 +1,52 @@
+"""Paper Fig. 4(c) / Table 1 memory column: backward-pass live memory vs
+number of solver steps, from the AOT-compiled artifact (temp_size_in_bytes).
+MALI/adjoint must stay flat; naive/ACA grow with N_t."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import odeint
+
+from .common import Row
+
+D = 8192
+STEPS = (4, 16, 64)
+METHOD_SOLVER = (("mali", None), ("naive", "alf"), ("aca", "heun_euler"),
+                 ("adjoint", "heun_euler"))
+
+
+def _f(params, z, t):
+    return jnp.tanh(params["w"] * z) * params["a"]
+
+
+def _temp_bytes(method, solver, n_steps) -> int:
+    params = {"w": jnp.ones((D,), jnp.float32) * 0.5,
+              "a": jnp.ones((D,), jnp.float32)}
+    z0 = jnp.ones((D,), jnp.float32)
+
+    def loss(p, z):
+        return jnp.sum(odeint(_f, p, z, 0.0, 1.0, method=method,
+                              solver=solver, n_steps=n_steps) ** 2)
+
+    c = jax.jit(jax.grad(loss, argnums=(0, 1))).lower(params, z0).compile()
+    ma = c.memory_analysis()
+    return int(ma.temp_size_in_bytes) if ma else -1
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for method, solver in METHOD_SOLVER:
+        series = []
+        for n in STEPS:
+            b = _temp_bytes(method, solver, n)
+            series.append(b)
+            rows.append((f"memory/temp_bytes/{method}/n={n}", b,
+                         f"state={D}xf32"))
+        growth = series[-1] / max(series[0], 1)
+        rows.append((f"memory/growth_{STEPS[0]}to{STEPS[-1]}/{method}",
+                     growth,
+                     "flat~1 expected for mali/adjoint; ~N_t for naive/aca"))
+    return rows

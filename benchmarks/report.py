@@ -1,0 +1,109 @@
+"""Render EXPERIMENTS.md tables from reports/dryrun/summary.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.report [--summary reports/dryrun/summary.jsonl]
+
+Prints the §Dry-run and §Roofline markdown tables (single-pod roofline per
+the assignment; multi-pod pass/fail only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def load(path):
+    best = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"])
+            best[key] = r
+    return best
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024 or unit == "TiB":
+            return f"{b:.1f} {unit}"
+        b /= 1024
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f} s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f} ms"
+    return f"{x * 1e6:.1f} us"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | 16x16 | 2x16x16 | bytes/dev (args+temp) | "
+          "compile s |")
+    print("|---|---|---|---|---|---|")
+    archs = sorted({a for a, _, _ in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for arch in archs:
+        for shape in shapes:
+            single = recs.get((arch, shape, "pod16x16"))
+            multi = recs.get((arch, shape, "pod2x16x16"))
+            if single is None and multi is None:
+                continue
+            r = single or multi
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | skip | skip | — | — |")
+                continue
+
+            def st(x):
+                return {"ok": "PASS", "error": "FAIL",
+                        None: "—"}.get(x and x["status"], "—")
+
+            mem = ""
+            cs = ""
+            if single and single["status"] == "ok":
+                m = single["memory"]
+                per_dev = (m.get("argument_size_in_bytes", 0)
+                           + m.get("temp_size_in_bytes", 0)) / 256
+                mem = fmt_bytes(per_dev)
+                cs = f"{single['compile_s']:.0f}"
+            print(f"| {arch} | {shape} | {st(single)} | {st(multi)} | "
+                  f"{mem} | {cs} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "useful/HLO flops | dominant-term driver |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in recs.items():
+        if mesh != "pod16x16" or r["status"] != "ok":
+            continue
+        f = r["roofline"]
+        drivers = {
+            "compute": "MXU occupancy (flops/chip)",
+            "memory": "HBM traffic (remat + activations)",
+            "collective": "ICI wire bytes (TP all-reduces)",
+        }
+        print(f"| {arch} | {shape} | {fmt_s(f['t_compute_s'])} | "
+              f"{fmt_s(f['t_memory_s'])} | {fmt_s(f['t_collective_s'])} | "
+              f"{f['bottleneck']} | {f['useful_flops_ratio']:.3f} | "
+              f"{drivers[f['bottleneck']]} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", default="reports/dryrun_final/summary.jsonl")
+    ap.add_argument("--table", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    a = ap.parse_args()
+    recs = load(a.summary)
+    if a.table in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        dryrun_table(recs)
+        print()
+    if a.table in ("roofline", "both"):
+        print("### Roofline (single-pod 16x16, per-chip terms)\n")
+        roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

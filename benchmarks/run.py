@@ -1,0 +1,74 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only toy_gradient_error ...]
+
+Emits ``name,value,derived`` CSV to stdout. Roofline numbers come from the
+dry-run (reports/dryrun/) and are summarized here if present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from .common import print_rows
+
+BENCHES = ("toy_gradient_error", "memory_cost", "solver_invariance",
+           "speed", "damped", "adversarial")
+
+
+def _dryrun_summary_rows():
+    path = os.path.join("reports", "dryrun_final", "summary.jsonl")
+    if not os.path.exists(path):
+        path = os.path.join("reports", "dryrun", "summary.jsonl")
+    if not os.path.exists(path):
+        return []
+    best = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") != "ok":
+                continue
+            key = (r["arch"], r["shape"], r["mesh"])
+            best[key] = r  # last write wins (most recent run)
+    rows = []
+    for (arch, shape, mesh), r in sorted(best.items()):
+        roof = r["roofline"]
+        t_dom = max(roof["t_compute_s"], roof["t_memory_s"],
+                    roof["t_collective_s"])
+        frac = roof["t_compute_s"] / t_dom if t_dom else 0.0
+        rows.append((f"roofline/{arch}/{shape}/{mesh}/bottleneck_frac",
+                     frac, roof["bottleneck"]))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {BENCHES}")
+    args = ap.parse_args()
+    names = args.only or BENCHES
+
+    print("name,value,derived")
+    failures = 0
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness going; report at exit
+            print(f"{name}/ERROR,nan,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        print_rows(rows)
+        print(f"{name}/wall_s,{time.time() - t0:.1f},harness")
+    print_rows(_dryrun_summary_rows())
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

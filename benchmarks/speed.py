@@ -1,0 +1,38 @@
+"""Paper Fig. 5 (right) analogue: wall-clock per training step for each
+gradient method at equal discretization. Expectation (Table 1 computation
+column): MALI ~ ACA < naive; adjoint pays the reverse re-integration."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import odeint
+
+from .common import Row, mlp_field, mlp_field_init, spirals, time_fn
+
+N_STEPS = 8
+METHOD_SOLVER = (("mali", None), ("naive", "alf"), ("aca", "heun_euler"),
+                 ("adjoint", "heun_euler"))
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    x, y = spirals(1024)
+    params = {"field": mlp_field_init(jax.random.PRNGKey(0), d_hidden=64),
+              "head": jnp.zeros((2, 2)), "b": jnp.zeros(2)}
+
+    for method, solver in METHOD_SOLVER:
+        def loss_fn(p):
+            feat = odeint(mlp_field, p["field"], x, 0.0, 1.0, method=method,
+                          solver=solver, n_steps=N_STEPS)
+            logits = feat @ p["head"] + p["b"]
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+        step = jax.jit(jax.grad(loss_fn))
+        us = time_fn(step, params)
+        rows.append((f"speed/train_step_us/{method}", us,
+                     f"n_steps={N_STEPS} batch=1024 (CPU relative)"))
+    return rows

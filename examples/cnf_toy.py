@@ -1,0 +1,162 @@
+"""Paper §4.4 at CPU scale: continuous normalizing flow (FFJORD) trained
+with MALI on a 2D density.
+
+    PYTHONPATH=src python examples/cnf_toy.py [--steps 600]
+
+The CNF integrates the augmented state (z, log|det|) with
+d(logdet)/dt = -tr(df/dz) — exact trace in 2D (the Hutchinson estimator is
+also implemented and checked against it). Reports NLL in nats (the 2D
+analogue of the paper's bits/dim).
+"""
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import odeint
+
+HID = 48
+
+
+def make_moons(n, seed):
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    th = rng.uniform(0, np.pi, half)
+    a = np.stack([np.cos(th), np.sin(th)], -1)
+    b = np.stack([1 - np.cos(th), 0.5 - np.sin(th)], -1)
+    x = np.concatenate([a, b]) + rng.normal(0, 0.08, (n, 2))
+    return jnp.asarray(x, jnp.float32)
+
+
+def init_field(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": 0.5 * jax.random.normal(k1, (3, HID)),
+            "b1": jnp.zeros((HID,)),
+            "w2": 0.5 * jax.random.normal(k2, (HID, HID)),
+            "b2": jnp.zeros((HID,)),
+            "w3": 0.5 * jax.random.normal(k3, (HID, 2)),
+            "b3": jnp.zeros((2,))}
+
+
+def vfield(fp, z, t):
+    """f(z, t) for a single point z: [2] -> [2]."""
+    t_col = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    h = jnp.tanh(jnp.concatenate([z, t_col], -1) @ fp["w1"] + fp["b1"])
+    h = jnp.tanh(h @ fp["w2"] + fp["b2"])
+    return h @ fp["w3"] + fp["b3"]
+
+
+def aug_field_exact(fp, state, t):
+    """Augmented dynamics with the EXACT 2D trace (vmapped over batch).
+    State = (z, delta, kinetic) with d(delta)/dt = +tr(df/dz), so that
+    log p(x) = log p_base(z_T) + delta_T (instantaneous change of variables:
+    d log p(z(t))/dt = -tr(df/dz) along the flow). dk/dt = |f|^2 is the
+    RNODE kinetic-energy
+    regularizer of Finlay et al. 2020 — the setting the paper's §4.4 uses
+    (reg coefficient 0.05)."""
+    z, _, _ = state
+
+    def one(zi):
+        f = lambda zz: vfield(fp, zz, t)
+        J = jax.jacfwd(f)(zi)
+        fz = f(zi)
+        return fz, jnp.trace(J), jnp.sum(fz ** 2)
+
+    dz, dld, dk = jax.vmap(one)(z)
+    return (dz, dld, dk)
+
+
+def aug_field_hutch(fp, state, t, eps):
+    """Hutchinson trace estimator (what image-scale FFJORD uses)."""
+    z, _, _ = state
+
+    def one(zi, ei):
+        f = lambda zz: vfield(fp, zz, t)
+        fz, jvp = jax.jvp(f, (zi,), (ei,))
+        return fz, jnp.dot(ei, jvp), jnp.sum(fz ** 2)
+
+    dz, dld, dk = jax.vmap(one)(z, eps)
+    return (dz, dld, dk)
+
+
+KINETIC_REG = 0.5    # Finlay-et-al-style coefficient (the paper uses 0.05
+                     # at image scale; the 2D toy needs a stronger pull to
+                     # keep the discretized logdet honest — see eval below)
+
+
+def nll(fp, x, method="mali", n_steps=8, reg=0.0, solver_n=None):
+    """-log p(x): integrate x -> base gaussian, exact trace (+ optional
+    kinetic-energy regularizer used during training)."""
+    state0 = (x, jnp.zeros(x.shape[:-1]), jnp.zeros(x.shape[:-1]))
+    solver = None
+    if solver_n is not None:
+        solver, n_steps = solver_n
+    zT, logdet, kinetic = odeint(aug_field_exact, fp, state0, 0.0, 1.0,
+                                 method=method, solver=solver,
+                                 n_steps=n_steps)
+    logp_base = -0.5 * jnp.sum(zT ** 2, -1) - math.log(2 * math.pi)
+    return -(logp_base + logdet).mean() + reg * kinetic.mean()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--method", default="mali")
+    args = ap.parse_args()
+
+    x = make_moons(1024, seed=0)
+    xt = make_moons(512, seed=1)
+    fp = init_field(jax.random.PRNGKey(0))
+
+    # sanity: Hutchinson estimator is unbiased vs exact trace
+    eps = jnp.asarray(np.random.default_rng(0).choice(
+        [-1.0, 1.0], (64, 100, 2)), jnp.float32)
+    s0 = (x[:100], jnp.zeros((100,)), jnp.zeros((100,)))
+    _, ld_exact, _ = aug_field_exact(fp, s0, 0.3)
+    ld_h = jnp.stack([aug_field_hutch(fp, s0, 0.3, e)[1] for e in eps])
+    err = float(jnp.abs(ld_h.mean(0) - ld_exact).mean())
+    print(f"hutchinson-vs-exact trace |bias| over 64 probes: {err:.4f}")
+
+    tm = jax.tree_util.tree_map
+    m = tm(jnp.zeros_like, fp)
+    v = tm(jnp.zeros_like, fp)
+
+    @jax.jit
+    def step(carry, i):
+        p, m, v = carry
+        l, g = jax.value_and_grad(
+            lambda pp, xx: nll(pp, xx, reg=KINETIC_REG))(p, x)
+        m = tm(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = tm(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1.0
+        p = tm(lambda pp, mm, vv: pp - 5e-3 * (mm / (1 - 0.9 ** t)) /
+               (jnp.sqrt(vv / (1 - 0.999 ** t)) + 1e-8), p, m, v)
+        return (p, m, v), l
+
+    (fp, _, _), losses = jax.lax.scan(
+        step, (fp, m, v), jnp.arange(args.steps, dtype=jnp.float32))
+    test_nll = float(nll(fp, xt, method=args.method))
+    # honest NLL: re-discretize finely with a higher-order solver — a CNF
+    # trained on a fixed coarse grid can game the discretized logdet, and
+    # the fine-solver eval (paper Table 2 spirit) exposes that
+    test_nll_fine = float(nll(fp, xt, method="naive", solver_n=("rk4", 64)))
+    base_nll = float(-(-0.5 * (xt ** 2).sum(-1)
+                       - math.log(2 * math.pi)).mean())
+    print(f"train NLL: first={float(losses[0]):.3f} "
+          f"last={float(losses[-1]):.3f}")
+    print(f"test NLL coarse(alf,8)={test_nll:.3f}  fine(rk4,64)="
+          f"{test_nll_fine:.3f}  raw-gaussian baseline={base_nll:.3f}")
+    assert test_nll_fine < base_nll, "flow must beat the identity baseline"
+
+    # sample back through the inverse flow (integrate base -> data time)
+    zs = jnp.asarray(np.random.default_rng(2).standard_normal((8, 2)),
+                     jnp.float32)
+    xs, _, _ = odeint(aug_field_exact, fp, (zs, jnp.zeros(8), jnp.zeros(8)),
+                      1.0, 0.0, method="mali", n_steps=8)
+    print("samples (first 3):", np.asarray(xs[:3]).round(2).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Paper §4.2 at CPU scale: residual net vs the SAME network as a
+continuous-depth Neural ODE trained with MALI.
+
+    PYTHONPATH=src python examples/image_recognition.py [--steps 400]
+
+Synthetic 8x8 3-class "images" (license-free stand-in for Cifar; the paper's
+mechanism — y = x + f(x) vs y = x + int_0^1 f(z)dt with SHARED f — is
+architecture-faithful). Reports test accuracy for (a) the residual baseline,
+(b) Neural-ODE+MALI, and (c) solver-invariance of (b) at inference.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import odeint
+
+D = 64           # flattened 8x8 image
+N_CLASS = 3
+HIDDEN = 64
+
+
+_PROTOS = np.random.default_rng(12345).standard_normal((N_CLASS, D)) * 0.6
+
+
+def make_data(n, seed):
+    """Three gaussian-blob classes (FIXED means shared by train/test) with
+    pixel noise; hard enough that the head alone can't solve it linearly."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, N_CLASS, n)
+    x = _PROTOS[y] + rng.standard_normal((n, D)) * 0.8
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y.astype(np.int32))
+
+
+def init_params(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = lambda *sh: 0.3 * jax.random.normal(k1, sh)
+    return {
+        "f": {"w1": 0.3 * jax.random.normal(k1, (D, HIDDEN)),
+              "b1": jnp.zeros((HIDDEN,)),
+              "w2": 0.3 * jax.random.normal(k2, (HIDDEN, D)),
+              "b2": jnp.zeros((D,))},
+        "norm": jnp.ones((D,)),
+        "head": 0.3 * jax.random.normal(k3, (D, N_CLASS)),
+        "bh": jnp.zeros((N_CLASS,)),
+    }
+
+
+def field(fp, z, t):
+    """The shared residual function f(z) (t-independent, like a ResNet
+    block)."""
+    h = jnp.tanh(z @ fp["w1"] + fp["b1"])
+    return h @ fp["w2"] + fp["b2"]
+
+
+def forward(params, x, mode, solver="alf", n_steps=4):
+    if mode == "resnet":                       # y = x + f(x)
+        z = x + field(params["f"], x, 0.0)
+    else:                                      # y = x + int_0^1 f dt
+        method = "mali" if solver == "alf" else "naive"
+        z = odeint(field, params["f"], x, 0.0, 1.0, method=method,
+                   solver=solver, n_steps=n_steps)
+    z = z * params["norm"]
+    return z @ params["head"] + params["bh"]
+
+
+def train(params, x, y, mode, steps, lr=3e-3):
+    def loss_fn(p):
+        logp = jax.nn.log_softmax(forward(p, x, mode))
+        return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+    tm = jax.tree_util.tree_map
+    m = tm(jnp.zeros_like, params)
+    v = tm(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(carry, i):
+        p, m, v = carry
+        l, g = jax.value_and_grad(loss_fn)(p)
+        m = tm(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = tm(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1.0
+        p = tm(lambda pp, mm, vv: pp - lr * (mm / (1 - 0.9 ** t)) /
+               (jnp.sqrt(vv / (1 - 0.999 ** t)) + 1e-8), p, m, v)
+        return (p, m, v), l
+
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, m, v), jnp.arange(steps, dtype=jnp.float32))
+    return params, float(losses[-1])
+
+
+def accuracy(params, x, y, mode, **kw):
+    return float((forward(params, x, mode, **kw).argmax(-1) == y).mean())
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+
+    x, y = make_data(2048, seed=0)
+    xt, yt = make_data(1024, seed=1)
+    p0 = init_params(jax.random.PRNGKey(0))
+
+    res, lr_loss = train(p0, x, y, "resnet", args.steps)
+    print(f"resnet      train_loss={lr_loss:.4f} "
+          f"test_acc={accuracy(res, xt, yt, 'resnet'):.3f}")
+
+    node, node_loss = train(p0, x, y, "node", args.steps)
+    print(f"node(MALI)  train_loss={node_loss:.4f} "
+          f"test_acc={accuracy(node, xt, yt, 'node'):.3f}")
+
+    # solver invariance (paper Table 2): same weights, different solvers
+    for solver, n in (("alf", 4), ("alf", 8), ("euler", 8), ("rk4", 4),
+                      ("dopri5", 4)):
+        a = accuracy(node, xt, yt, "node", solver=solver, n_steps=n)
+        print(f"  invariance: solver={solver:7s} n={n}  test_acc={a:.3f}")
+
+
+if __name__ == "__main__":
+    main()

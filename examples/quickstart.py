@@ -1,0 +1,77 @@
+"""Quickstart: the MALI integrator in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Integrate an ODE with the public `odeint` facade.
+2. Take gradients through it with each method (Table 1 of the paper).
+3. Show MALI's two properties: constant memory and reverse accuracy.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import odeint
+
+
+# dz/dt = alpha * z  — the paper's Sec 4.1 toy with analytic solution.
+def f(params, z, t):
+    return params["alpha"] * z
+
+
+params = {"alpha": jnp.float32(0.5)}
+z0 = jnp.float32(1.3)
+T = 1.0
+
+# ---- 1. forward integration --------------------------------------------
+zT = odeint(f, params, z0, 0.0, T, method="mali", n_steps=16)
+print(f"z(T) numeric {float(zT):.6f} vs analytic "
+      f"{1.3 * math.exp(0.5 * T):.6f}")
+
+# ---- 2. gradients through the integrator, all four methods --------------
+exact_dalpha = 2 * T * 1.3 ** 2 * math.exp(2 * 0.5 * T)
+
+
+def loss(p, z, method):
+    return odeint(f, p, z, 0.0, T, method=method, n_steps=16) ** 2
+
+
+for method in ("mali", "naive", "aca", "adjoint"):
+    g = jax.grad(loss)(params, z0, method)
+    err = abs(float(g["alpha"]) - exact_dalpha)
+    print(f"{method:8s} dL/dalpha = {float(g['alpha']):.5f} "
+          f"(analytic {exact_dalpha:.5f}, err {err:.2e})")
+
+# ---- 3a. constant memory: residual bytes flat in n_steps ----------------
+big = {"w": jnp.ones((65536,), jnp.float32)}
+
+
+def big_f(p, z, t):
+    return jnp.tanh(p["w"] * z)
+
+
+def big_loss(p, z, method, n):
+    return jnp.sum(odeint(big_f, p, z, 0.0, 1.0, method=method,
+                          solver="alf" if method == "naive" else None,
+                          n_steps=n) ** 2)
+
+
+for method in ("mali", "naive"):
+    sizes = []
+    for n in (8, 64):
+        c = jax.jit(jax.grad(big_loss, argnums=0),
+                    static_argnums=(2, 3)).lower(
+            big, jnp.ones((65536,)), method, n).compile()
+        sizes.append(c.memory_analysis().temp_size_in_bytes)
+    print(f"{method:8s} backward temp bytes: n=8 -> {sizes[0]:,}  "
+          f"n=64 -> {sizes[1]:,}  (x{sizes[1] / sizes[0]:.1f})")
+
+# ---- 3b. reverse accuracy: MALI == backprop through its own forward -----
+g_mali = jax.grad(loss)(params, z0, "mali")
+g_naive = jax.grad(lambda p, z: odeint(f, p, z, 0.0, T, method="naive",
+                                       solver="alf", n_steps=16) ** 2)(
+    params, z0)
+rel = abs(float(g_mali["alpha"]) - float(g_naive["alpha"])) / abs(
+    float(g_naive["alpha"]))
+print(f"reverse-accuracy invariant |mali-naive|/|naive| = {rel:.2e} "
+      "(float rounding)")

@@ -1,0 +1,135 @@
+"""Paper §4.3 at CPU scale: latent ODE (Rubanova et al. 2019) for
+irregularly-sampled time series, trained with MALI.
+
+    PYTHONPATH=src python examples/time_series_latent_ode.py [--steps 500]
+
+Encoder (GRU over observed points, reversed) -> latent z0 -> latent dynamics
+integrated with MALI -> decoder -> MSE on held-out segment. Synthetic damped
+2D oscillators with random frequencies/phases stand in for the Mujoco-Hopper
+stream (same protocol: condition on the first half, extrapolate the rest).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import odeint
+
+LATENT = 8
+OBS = 2
+HID = 32
+T_OBS = 25     # conditioning points
+T_EXT = 25     # extrapolation points
+
+
+def make_series(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.8, 2.0, (n, 1))
+    phi = rng.uniform(0, 2 * np.pi, (n, 1))
+    amp = rng.uniform(0.5, 1.5, (n, 1))
+    t = np.linspace(0, 5, T_OBS + T_EXT)[None, :]
+    x = amp * np.exp(-0.1 * t) * np.cos(w * t + phi)
+    y = amp * np.exp(-0.1 * t) * np.sin(w * t + phi)
+    series = np.stack([x, y], -1)   # [n, T, 2]
+    return jnp.asarray(series, jnp.float32), jnp.asarray(t[0], jnp.float32)
+
+
+def init_params(key):
+    ks = jax.random.split(key, 8)
+    g = lambda k, *sh: 0.3 * jax.random.normal(k, sh)
+    return {
+        "enc_in": g(ks[0], OBS, HID),
+        "enc_h": g(ks[1], HID, HID),
+        "enc_out": g(ks[2], HID, LATENT),
+        "f": {"w1": g(ks[3], LATENT + 1, HID), "b1": jnp.zeros((HID,)),
+              "w2": g(ks[4], HID, LATENT), "b2": jnp.zeros((LATENT,))},
+        "dec_w": g(ks[5], LATENT, HID),
+        "dec_w2": g(ks[6], HID, OBS),
+        "dec_b": jnp.zeros((OBS,)),
+    }
+
+
+def encode(params, obs):
+    """Reverse-time RNN over the conditioning window -> z0."""
+    def cell(h, x):
+        h = jnp.tanh(x @ params["enc_in"] + h @ params["enc_h"])
+        return h, None
+
+    h0 = jnp.zeros(obs.shape[:-2] + (HID,))
+    h, _ = jax.lax.scan(cell, h0, jnp.moveaxis(obs[..., ::-1, :], -2, 0))
+    return h @ params["enc_out"]
+
+
+def latent_field(fp, z, t):
+    t_col = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    h = jnp.tanh(jnp.concatenate([z, t_col], -1) @ fp["w1"] + fp["b1"])
+    return h @ fp["w2"] + fp["b2"]
+
+
+def decode(params, z):
+    return jnp.tanh(z @ params["dec_w"]) @ params["dec_w2"] + params["dec_b"]
+
+
+def rollout(params, z0, ts, method="mali"):
+    """Integrate latent state to each observation time (piecewise MALI)."""
+    def seg(z, t_pair):
+        t0, t1 = t_pair
+        z1 = odeint(latent_field, params["f"], z, t0, t1, method=method,
+                    n_steps=2)
+        return z1, z1
+
+    pairs = jnp.stack([ts[:-1], ts[1:]], -1)
+    _, zs = jax.lax.scan(seg, z0, pairs)
+    return jnp.concatenate([z0[None], zs], 0)   # [T, ..., LATENT]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--method", default="mali",
+                    choices=["mali", "naive", "aca", "adjoint"])
+    args = ap.parse_args()
+
+    series, ts = make_series(256, seed=0)
+    test, _ = make_series(128, seed=1)
+    params = init_params(jax.random.PRNGKey(0))
+
+    def loss_fn(p, data):
+        obs = data[:, :T_OBS]
+        z0 = encode(p, obs)
+        zs = rollout(p, z0, ts, method=args.method)     # [T, B, L]
+        pred = decode(p, jnp.moveaxis(zs, 0, 1))        # [B, T, OBS]
+        return jnp.mean((pred - data) ** 2)
+
+    tm = jax.tree_util.tree_map
+    m = tm(jnp.zeros_like, params)
+    v = tm(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(carry, i):
+        p, m, v = carry
+        l, g = jax.value_and_grad(loss_fn)(p, series)
+        m = tm(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = tm(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1.0
+        p = tm(lambda pp, mm, vv: pp - 5e-3 * (mm / (1 - 0.9 ** t)) /
+               (jnp.sqrt(vv / (1 - 0.999 ** t)) + 1e-8), p, m, v)
+        return (p, m, v), l
+
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, m, v), jnp.arange(args.steps, dtype=jnp.float32))
+    print(f"train MSE: first={float(losses[0]):.4f} "
+          f"last={float(losses[-1]):.4f}")
+
+    # held-out extrapolation MSE (the paper's Table 4 metric)
+    obs = test[:, :T_OBS]
+    zs = rollout(params, encode(params, obs), ts, method=args.method)
+    pred = decode(params, jnp.moveaxis(zs, 0, 1))
+    ext_mse = float(jnp.mean((pred[:, T_OBS:] - test[:, T_OBS:]) ** 2))
+    print(f"test extrapolation MSE ({args.method}): {ext_mse:.4f}")
+    assert np.isfinite(ext_mse)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: production-grade JAX framework reproducing MALI (ICLR 2021)."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from .checkpoint import (AsyncCheckpointer, list_checkpoints,
+                         restore_checkpoint, restore_latest, save_checkpoint,
+                         prune_checkpoints)

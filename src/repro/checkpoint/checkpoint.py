@@ -1,0 +1,188 @@
+"""Checkpointing: flat-npz + json manifest, atomic, async, keep-k.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, with a final atomic
+rename from a ".tmp" staging dir so a crash mid-write never corrupts the
+latest checkpoint. An async writer thread overlaps serialization with the
+next training steps (device->host copy happens on the caller thread so the
+arrays are immutable snapshots).
+
+restore_latest() is the fault-tolerance entry point (distributed/
+fault_tolerance.py): after a failure+re-mesh the launcher resumes from here;
+arrays are re-placed against the (possibly different) new mesh by the
+caller's device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't represent ml_dtypes (bfloat16, fp8): store them bit-exactly
+    as same-width unsigned ints; restore views them back via the tree_like
+    dtype."""
+    if arr.dtype.kind == "V" or arr.dtype.name in (
+            "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        return arr.view({1: np.uint8, 2: np.uint16}[arr.dtype.itemsize])
+    return arr
+
+
+def _from_savable(arr: np.ndarray, like_dtype) -> np.ndarray:
+    like = np.dtype(like_dtype)
+    if (like.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2")
+            and arr.dtype.kind == "u"
+            and arr.dtype.itemsize == like.itemsize):
+        return arr.view(like)   # bit-exact ml_dtypes round-trip
+    return arr.astype(like)
+
+
+def _flatten_with_paths(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = _to_savable(np.asarray(jax.device_get(leaf)))
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
+                    metadata: Optional[dict] = None) -> str:
+    """Synchronous atomic save; returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def list_checkpoints(ckpt_dir: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(ckpt_dir, name)
+            if os.path.exists(os.path.join(full, "manifest.json")):
+                out.append((int(name[5:]), full))
+    return sorted(out)
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    ckpts = list_checkpoints(ckpt_dir)
+    for _, path in ckpts[:-keep] if keep > 0 else []:
+        shutil.rmtree(path)
+
+
+def restore_checkpoint(path: str, tree_like: Pytree) -> Tuple[Pytree, dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path_entries, like in paths:
+        key = _SEP.join(_path_str(p) for p in path_entries)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {like.shape}")
+        leaves.append(_from_savable(arr, like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def restore_latest(ckpt_dir: str, tree_like: Pytree
+                   ) -> Optional[Tuple[int, Pytree, dict]]:
+    ckpts = list_checkpoints(ckpt_dir)
+    if not ckpts:
+        return None
+    step, path = ckpts[-1]
+    tree, meta = restore_checkpoint(path, tree_like)
+    return step, tree, meta
+
+
+class AsyncCheckpointer:
+    """Background writer: save() snapshots to host then enqueues the write."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._errors: List[BaseException] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, flat, metadata = item
+            try:
+                final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+                tmp = final + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump({"step": step, "keys": sorted(flat),
+                               "metadata": metadata or {}}, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                prune_checkpoints(self.ckpt_dir, self.keep)
+            except BaseException as e:  # surfaced on next save/wait/close
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: Pytree, metadata: Optional[dict] = None):
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        flat = _flatten_with_paths(tree)   # device->host on caller thread
+        self._q.put((step, flat, metadata))
+
+    def wait(self):
+        """Block until all enqueued saves hit disk (writer stays alive)."""
+        self._q.join()
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")

@@ -1,0 +1,15 @@
+"""Core MALI / Neural-ODE integrator library (the paper's contribution)."""
+from .alf import (alf_inverse, alf_step, alf_step_with_error, init_velocity,
+                  tree_add, tree_scale, tree_sub, tree_zeros_like)
+from .api import (METHODS, mali_forward_stats, odeint, odeint_aca,
+                  odeint_adjoint, odeint_mali, odeint_naive)
+from .ode_block import OdeSettings, ode_block
+from .solvers import SOLVERS, get_solver
+
+__all__ = [
+    "alf_step", "alf_inverse", "alf_step_with_error", "init_velocity",
+    "odeint", "odeint_mali", "odeint_naive", "odeint_aca", "odeint_adjoint",
+    "mali_forward_stats", "METHODS", "SOLVERS", "get_solver",
+    "OdeSettings", "ode_block",
+    "tree_add", "tree_sub", "tree_scale", "tree_zeros_like",
+]

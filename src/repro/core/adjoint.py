@@ -1,0 +1,128 @@
+"""Adjoint method (Chen et al. 2018, torchdiffeq-style) as jax.custom_vjp.
+
+Forward: integrate and keep only z(T) — O(1) memory. Backward: solve the
+*reverse-time* augmented IVP
+
+    d/dt [ z, a, g ] = [ f,  -(df/dz)^T a,  -(df/dtheta)^T a ]
+
+from T down to t0, re-deriving the trajectory numerically. Because the
+reverse-time trajectory is itself a numerical solution, it drifts from the
+forward one (paper Thm 2.1) — this is the inaccuracy MALI removes. We keep
+this implementation as the paper's main baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .alf import (alf_step, alf_step_with_error, check_eta, init_velocity,
+                  tree_zeros_like)
+from .integrate import integrate_adaptive, integrate_fixed
+from .solvers import ButcherTableau, get_solver
+from .stepsize import error_ratio
+
+Pytree = Any
+Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+
+
+class AdjointConfig(NamedTuple):
+    f: Dynamics
+    solver: Any             # ButcherTableau or AlfSolverMeta
+    solver_name: str
+    n_steps: int
+    eta: float
+    rtol: float
+    atol: float
+    max_steps: int
+
+
+def _integrate(cfg: AdjointConfig, dyn: Dynamics, params: Pytree,
+               state0: Pytree, t0, t1) -> Pytree:
+    """Forward-integrate ``dyn`` with cfg's solver; not differentiated."""
+    if cfg.solver_name == "alf":
+        v0 = init_velocity(dyn, params, state0, t0)
+
+        if cfg.n_steps > 0:
+            def step(s, t, h):
+                z, v = s
+                return alf_step(dyn, params, z, v, t, h, cfg.eta)
+
+            zT, _ = integrate_fixed(step, (state0, v0), t0, t1, cfg.n_steps)
+            return zT
+
+        def trial(s, t, h):
+            z, v = s
+            z1, v1, err = alf_step_with_error(dyn, params, z, v, t, h, cfg.eta)
+            return (z1, v1), error_ratio(err, z, z1, cfg.rtol, cfg.atol)
+
+        out = integrate_adaptive(trial, (state0, v0), t0, t1, order=2,
+                                 rtol=cfg.rtol, atol=cfg.atol,
+                                 max_steps=cfg.max_steps)
+        return out.state[0]
+
+    sol = cfg.solver
+    assert isinstance(sol, ButcherTableau)
+    if cfg.n_steps > 0:
+        def step(z, t, h):
+            z1, _ = sol.step(dyn, params, z, t, h)
+            return z1
+
+        return integrate_fixed(step, state0, t0, t1, cfg.n_steps)
+
+    def trial(z, t, h):
+        z1, err = sol.step(dyn, params, z, t, h)
+        return z1, error_ratio(err, z, z1, cfg.rtol, cfg.atol)
+
+    out = integrate_adaptive(trial, state0, t0, t1, order=sol.order,
+                             rtol=cfg.rtol, atol=cfg.atol,
+                             max_steps=cfg.max_steps)
+    return out.state
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _adjoint(cfg: AdjointConfig, params: Pytree, z0: Pytree,
+             t0: jax.Array, t1: jax.Array) -> Pytree:
+    return _integrate(cfg, cfg.f, params, z0, t0, t1)
+
+
+def _adjoint_fwd(cfg, params, z0, t0, t1):
+    zT = _integrate(cfg, cfg.f, params, z0, t0, t1)
+    return zT, (params, zT, t0, t1)  # O(1) residuals
+
+
+def _adjoint_bwd(cfg, res, g_zT):
+    params, zT, t0, t1 = res
+
+    def aug_dyn(p, aug, t):
+        z, a, _g = aug
+        f_val, vjp_fn = jax.vjp(lambda pp, zz: cfg.f(pp, zz, t), p, z)
+        dp, dz = vjp_fn(a)
+        neg = jax.tree_util.tree_map(jnp.negative, (dz, dp))
+        return (f_val, neg[0], neg[1])
+
+    aug0 = (zT, g_zT, tree_zeros_like(params))
+    # Reverse-time IVP: integrate the augmented system from t1 back to t0.
+    zrec, a_z, g_params = _integrate(cfg, aug_dyn, params, aug0, t1, t0)
+    zero_t = jnp.zeros_like(jnp.asarray(t0))
+    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+
+
+_adjoint.defvjp(_adjoint_fwd, _adjoint_bwd)
+
+
+def odeint_adjoint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
+                   solver: str = "dopri5", n_steps: int = 0, eta: float = 1.0,
+                   rtol: float = 1e-2, atol: float = 1e-3,
+                   max_steps: int = 64) -> Pytree:
+    sol = get_solver(solver)
+    if solver == "alf":
+        check_eta(eta)
+    elif n_steps == 0 and sol.b_err is None:
+        raise ValueError(f"solver {solver!r} has no embedded error estimate")
+    cfg = AdjointConfig(f, sol, solver, int(n_steps), float(eta), float(rtol),
+                        float(atol), int(max_steps))
+    return _adjoint(cfg, params, z0, jnp.asarray(t0, jnp.float32),
+                    jnp.asarray(t1, jnp.float32))

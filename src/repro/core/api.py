@@ -1,0 +1,61 @@
+"""Unified odeint facade: method x solver dispatch (paper Table 1 columns)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from .aca import odeint_aca
+from .adjoint import odeint_adjoint
+from .mali import mali_forward_stats, odeint_mali
+from .naive import odeint_naive
+
+Pytree = Any
+Dynamics = Callable[[Pytree, Pytree, Any], Pytree]
+
+_DEFAULT_SOLVER = {
+    "mali": "alf",
+    "naive": "alf",
+    "aca": "heun_euler",
+    "adjoint": "dopri5",
+}
+
+METHODS = tuple(_DEFAULT_SOLVER)
+
+
+def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
+           method: str = "mali", solver: str | None = None, n_steps: int = 0,
+           eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
+           max_steps: int = 64, fused_bwd: bool = True) -> Pytree:
+    """Integrate dz/dt = f(params, z, t) over [t0, t1].
+
+    method: gradient-estimation strategy — 'mali' (paper), 'naive',
+            'aca', 'adjoint' (baselines; Table 1).
+    solver: 'alf' | 'euler' | 'heun_euler' | 'midpoint' | 'rk23' | 'rk4' |
+            'dopri5'. MALI requires 'alf'.
+    n_steps > 0 -> fixed uniform grid; n_steps == 0 -> adaptive (rtol/atol,
+            bounded by max_steps trials).
+    """
+    if method not in _DEFAULT_SOLVER:
+        raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+    solver = solver or _DEFAULT_SOLVER[method]
+
+    if method == "mali":
+        if solver != "alf":
+            raise ValueError("MALI is defined for the ALF solver only")
+        return odeint_mali(f, params, z0, t0, t1, n_steps=n_steps, eta=eta,
+                           rtol=rtol, atol=atol, max_steps=max_steps,
+                           fused_bwd=fused_bwd)
+    if method == "naive":
+        return odeint_naive(f, params, z0, t0, t1, solver=solver,
+                            n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
+                            max_steps=max_steps)
+    if method == "aca":
+        return odeint_aca(f, params, z0, t0, t1, solver=solver,
+                          n_steps=n_steps, rtol=rtol, atol=atol,
+                          max_steps=max_steps)
+    return odeint_adjoint(f, params, z0, t0, t1, solver=solver,
+                          n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
+                          max_steps=max_steps)
+
+
+__all__ = ["odeint", "odeint_mali", "odeint_naive", "odeint_aca",
+           "odeint_adjoint", "mali_forward_stats", "METHODS"]

@@ -1,0 +1,141 @@
+"""Shared fixed-step and adaptive-step integration drivers (paper Algo 1).
+
+Both drivers are pure jittable functions built on ``lax.scan`` so that they
+are usable (a) inside ``jax.custom_vjp`` forwards (MALI/ACA/adjoint) and
+(b) directly under reverse-mode AD (the naive method) — ``lax.while_loop``
+is not reverse-differentiable, a bounded masked scan is.
+
+The adaptive driver performs exactly one trial step per scan iteration
+(accepted or rejected), mirroring the eval accounting of Algo 1: rejected
+trials still cost f-evals, and the step size shrinks on reject / grows on
+accept via the controller in core/stepsize.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .stepsize import (MAX_FACTOR, MIN_FACTOR, SAFETY, initial_step_size,
+                       next_step_size)
+
+_tm = jax.tree_util.tree_map
+
+Pytree = Any
+# trial(state, t, h) -> (state_next, err_ratio)    err_ratio <= 1 accepts
+TrialFn = Callable[[Pytree, jax.Array, jax.Array], Tuple[Pytree, jax.Array]]
+# step(state, t, h) -> state_next
+StepFn = Callable[[Pytree, jax.Array, jax.Array], Pytree]
+
+
+def tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
+    return _tm(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def fixed_grid_times(t0: jax.Array, t1: jax.Array, n_steps: int):
+    """(t_i, h) for a uniform grid; forward and backward passes must use the
+    *identical* arithmetic (t_i = t0 + i*h) for MALI's exact reconstruction."""
+    h = (t1 - t0) / n_steps
+    ts = t0 + h * jnp.arange(n_steps, dtype=jnp.result_type(t0, t1, float))
+    return ts, h
+
+
+def integrate_fixed(step: StepFn, state0: Pytree, t0: jax.Array,
+                    t1: jax.Array, n_steps: int) -> Pytree:
+    ts, h = fixed_grid_times(t0, t1, n_steps)
+
+    def body(state, t):
+        return step(state, t, h), None
+
+    state, _ = lax.scan(body, state0, ts)
+    return state
+
+
+class AdaptiveResult(NamedTuple):
+    state: Pytree            # final state at t1
+    ts: jax.Array            # (max_steps,) accepted step *start* times
+    hs: jax.Array            # (max_steps,) accepted step sizes
+    n_accepted: jax.Array    # int32
+    n_evals: jax.Array       # int32 trial count (= f-eval multiplier)
+    state_traj: Optional[Pytree]  # per-accepted-step start states (if recorded)
+
+
+def integrate_adaptive(
+    trial: TrialFn,
+    state0: Pytree,
+    t0: jax.Array,
+    t1: jax.Array,
+    *,
+    order: int,
+    rtol: float,
+    atol: float,
+    max_steps: int,
+    h0: Optional[jax.Array] = None,
+    record_states: bool = False,
+) -> AdaptiveResult:
+    dtype = jnp.result_type(t0, t1, float)
+    t0 = jnp.asarray(t0, dtype)
+    t1 = jnp.asarray(t1, dtype)
+    span = t1 - t0
+    h_init = initial_step_size(rtol, atol, span) if h0 is None else jnp.asarray(h0, dtype)
+
+    ts_buf = jnp.zeros((max_steps,), dtype)
+    hs_buf = jnp.zeros((max_steps,), dtype)
+    traj_buf = None
+    if record_states:
+        traj_buf = _tm(lambda x: jnp.zeros((max_steps,) + x.shape, x.dtype), state0)
+
+    def body(carry, _):
+        state, t, h, done, n_acc, n_ev, ts, hs, traj = carry
+        remaining = t1 - t
+        is_last = jnp.abs(h) >= jnp.abs(remaining)
+        h_eff = jnp.where(is_last, remaining, h)
+
+        state_next, ratio = trial(state, t, h_eff)
+        accept = (ratio <= 1.0) & (~done)
+        n_ev = n_ev + jnp.where(done, 0, 1).astype(jnp.int32)
+
+        # Record the accepted step's (start-time, stepsize, start-state).
+        ts = ts.at[n_acc].set(jnp.where(accept, t, ts[n_acc]))
+        hs = hs.at[n_acc].set(jnp.where(accept, h_eff, hs[n_acc]))
+        if traj is not None:
+            traj = _tm(
+                lambda buf, s: buf.at[n_acc].set(jnp.where(accept, s, buf[n_acc])),
+                traj, state)
+
+        new_t = jnp.where(accept, jnp.where(is_last, t1, t + h_eff), t)
+        new_state = tree_where(accept, state_next, state)
+        new_done = done | (accept & is_last)
+        h_next = next_step_size(h_eff, ratio, order)
+        # Keep the controller's proposal frozen once done (cosmetic).
+        h_next = jnp.where(done, h, h_next)
+        n_acc = n_acc + accept.astype(jnp.int32)
+        return (new_state, new_t, h_next, new_done, n_acc, n_ev, ts, hs, traj), None
+
+    init = (state0, t0, h_init, jnp.asarray(False), jnp.asarray(0, jnp.int32),
+            jnp.asarray(0, jnp.int32), ts_buf, hs_buf, traj_buf)
+    (state, t, h, done, n_acc, n_ev, ts, hs, traj), _ = lax.scan(
+        body, init, None, length=max_steps)
+    return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj)
+
+
+def reverse_masked_scan(body: Callable, carry0: Pytree, ts: jax.Array,
+                        hs: jax.Array, n_accepted: jax.Array,
+                        max_steps: int, extras: Optional[Pytree] = None):
+    """Scan i = n_accepted-1 .. 0 over recorded (t_i, h_i[, extras_i]) with
+    identity pass-through for the padding slots i >= n_accepted.
+
+    ``body(carry, t, h, extra) -> carry`` is only applied to live slots.
+    """
+    idxs = jnp.arange(max_steps - 1, -1, -1)
+
+    def wrapped(carry, i):
+        live = i < n_accepted
+        extra_i = None if extras is None else _tm(lambda b: b[i], extras)
+        new_carry = body(carry, ts[i], hs[i], extra_i)
+        return tree_where(live, new_carry, carry), None
+
+    carry, _ = lax.scan(wrapped, carry0, idxs)
+    return carry

@@ -1,0 +1,263 @@
+"""MALI: Memory-efficient ALF Integrator (paper Algo 4) as a jax.custom_vjp.
+
+Forward: integrate with ALF (fixed grid or adaptive), keep ONLY the end-time
+augmented state (z_T, v_T) and — in the adaptive case — the accepted step
+sizes / start times. No per-step activations are saved: the VJP residual set
+is O(N_z), constant in the number of solver steps.
+
+Backward: reconstruct the trajectory step-by-step with the exact ALF inverse
+(psi^-1) and run one local VJP of psi per accepted step, accumulating the
+adjoint state a(t) and dL/dtheta — the discretized Eq. (2)/(3) of the paper.
+The stepsize *search* (rejected trials) is excluded, so the effective
+computation-graph depth is N_f x N_t (Table 1, MALI column).
+
+Gradients w.r.t. the integration bounds t0/t1 are not propagated (zeros); the
+framework never differentiates them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .alf import (alf_inverse, alf_step, alf_step_with_error, check_eta,
+                  init_velocity, tree_add, tree_zeros_like)
+from .integrate import (fixed_grid_times, integrate_adaptive, integrate_fixed,
+                        reverse_masked_scan)
+from .stepsize import error_ratio
+
+_tm = jax.tree_util.tree_map
+
+Pytree = Any
+Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+
+
+class MaliConfig(NamedTuple):
+    """Static (hashable) integrator configuration."""
+    f: Dynamics
+    n_steps: int            # >0: fixed grid; 0: adaptive
+    eta: float
+    rtol: float
+    atol: float
+    max_steps: int
+    fused_bwd: bool = True  # share the inverse's f-eval with the local VJP
+
+
+# ---------------------------------------------------------------------------
+# Fixed-step MALI
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mali_fixed(cfg: MaliConfig, params: Pytree, z0: Pytree,
+                t0: jax.Array, t1: jax.Array) -> Pytree:
+    zT, _vT = _mali_fixed_forward(cfg, params, z0, t0, t1)
+    return zT
+
+
+def _mali_fixed_forward(cfg, params, z0, t0, t1):
+    v0 = init_velocity(cfg.f, params, z0, t0)
+
+    def step(state, t, h):
+        z, v = state
+        return alf_step(cfg.f, params, z, v, t, h, cfg.eta)
+
+    return integrate_fixed(step, (z0, v0), t0, t1, cfg.n_steps)
+
+
+def _mali_fixed_fwd(cfg, params, z0, t0, t1):
+    zT, vT = _mali_fixed_forward(cfg, params, z0, t0, t1)
+    # Residuals: end state only — O(N_z), constant in n_steps.
+    return zT, (params, zT, vT, t0, t1)
+
+
+def _local_step_vjp(f, eta, params, z_prev, v_prev, t_prev, h, a_z, a_v):
+    """VJP of one ALF step at the reconstructed input state (reference
+    path: re-plays psi under jax.vjp; kept as the oracle for the fused
+    implementation below)."""
+    def step_fn(p, z, v):
+        return alf_step(f, p, z, v, t_prev, h, eta)
+
+    _, vjp_fn = jax.vjp(step_fn, params, z_prev, v_prev)
+    return vjp_fn((a_z, a_v))  # (dL/dparams, dL/dz_prev, dL/dv_prev)
+
+
+def _fused_inverse_and_vjp(f, eta, params, z_i, v_i, t_i, h, a_z, a_v):
+    """One backward step of Algo 4 with the inverse's f-eval SHARED with the
+    local VJP (beyond-paper optimization; EXPERIMENTS.md §Perf).
+
+    The ALF inverse evaluates u1 = f(k1, s1) at k1 = z_i - v_i*h/2; the
+    local VJP of psi needs the linearization of f at exactly the same point
+    (k1 = z_prev + v_prev*h/2 by construction). One ``jax.vjp`` call
+    provides both, cutting the backward from 4 to 3 f-eval-equivalents per
+    step. The rest of psi is linear, so its VJP is written out by hand:
+
+        v_out = (1-2*eta)*v_prev + 2*eta*u1 ;  z_out = k1 + v_out*h/2
+        cot_vout = a_v + (h/2)*a_z
+        cot_u1   = 2*eta*cot_vout
+        (dparams, dk1) = vjp_f(cot_u1)
+        cot_k1   = a_z + dk1
+        dz_prev  = cot_k1
+        dv_prev  = (h/2)*cot_k1 + (1-2*eta)*cot_vout
+
+    Returns (z_prev, v_prev, dz_prev, dv_prev, dparams).
+    """
+    s1 = t_i - h / 2
+    k1 = _tm(lambda zi, vi: zi - vi * (h / 2), z_i, v_i)
+    u1, vjp_f = jax.vjp(lambda p, kk: f(p, kk, s1), params, k1)
+    # inverse tail (Algo 3 / damped Appendix Algo 3)
+    if eta == 1.0:
+        v_prev = _tm(lambda ui, vo: 2.0 * ui - vo, u1, v_i)
+    else:
+        inv = 1.0 / (1.0 - 2.0 * eta)
+        v_prev = _tm(lambda vo, ui: (vo - 2.0 * eta * ui) * inv, v_i, u1)
+    z_prev = _tm(lambda ki, vp: ki - vp * (h / 2), k1, v_prev)
+    # manual VJP of the (linear-except-f) forward step
+    cot_vout = _tm(lambda av, az: av + (h / 2) * az, a_v, a_z)
+    cot_u1 = _tm(lambda c: 2.0 * eta * c, cot_vout)
+    dparams, dk1 = vjp_f(cot_u1)
+    cot_k1 = _tm(jnp.add, a_z, dk1)
+    dz_prev = cot_k1
+    dv_prev = _tm(lambda ck, cv: (h / 2) * ck + (1.0 - 2.0 * eta) * cv,
+                  cot_k1, cot_vout)
+    return z_prev, v_prev, dz_prev, dv_prev, dparams
+
+
+def _close_v0_vjp(f, params, z0, t0, a_z, a_v, g_params):
+    """Close the v0 = f(z0, t0) initialization: route a_v into z0/params."""
+    _, vjp_f = jax.vjp(lambda p, z: f(p, z, t0), params, z0)
+    dp, dz = vjp_f(a_v)
+    return tree_add(g_params, dp), tree_add(a_z, dz)
+
+
+def _mali_fixed_bwd(cfg, res, g_zT):
+    params, zT, vT, t0, t1 = res
+    ts, h = fixed_grid_times(t0, t1, cfg.n_steps)
+
+    a_z = g_zT
+    a_v = tree_zeros_like(vT)
+    g_params = tree_zeros_like(params)
+
+    def body(carry, t_start):
+        z_i, v_i, a_z, a_v, g_p = carry
+        if cfg.fused_bwd:
+            z_prev, v_prev, dz, dv, dp = _fused_inverse_and_vjp(
+                cfg.f, cfg.eta, params, z_i, v_i, t_start + h, h, a_z, a_v)
+        else:
+            # Reconstruct the step input exactly via the ALF inverse ...
+            z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i,
+                                         t_start + h, h, cfg.eta)
+            # ... then backprop through the (re-played) accepted step only.
+            dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev,
+                                         v_prev, t_start, h, a_z, a_v)
+        return (z_prev, v_prev, dz, dv, tree_add(g_p, dp)), None
+
+    carry0 = (zT, vT, a_z, a_v, g_params)
+    (z0_rec, v0_rec, a_z, a_v, g_params), _ = lax.scan(
+        body, carry0, ts, reverse=True)
+
+    g_params, a_z = _close_v0_vjp(cfg.f, params, z0_rec, t0, a_z, a_v, g_params)
+    zero_t = jnp.zeros_like(jnp.asarray(t0))
+    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+
+
+_mali_fixed.defvjp(_mali_fixed_fwd, _mali_fixed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-step MALI
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mali_adaptive(cfg: MaliConfig, params: Pytree, z0: Pytree,
+                   t0: jax.Array, t1: jax.Array) -> Pytree:
+    out = _mali_adaptive_forward(cfg, params, z0, t0, t1)
+    return out.state[0]
+
+
+def _mali_adaptive_forward(cfg, params, z0, t0, t1):
+    v0 = init_velocity(cfg.f, params, z0, t0)
+
+    def trial(state, t, h):
+        z, v = state
+        z1, v1, err = alf_step_with_error(cfg.f, params, z, v, t, h, cfg.eta)
+        ratio = error_ratio(err, z, z1, cfg.rtol, cfg.atol)
+        return (z1, v1), ratio
+
+    return integrate_adaptive(trial, (z0, v0), t0, t1, order=2,
+                              rtol=cfg.rtol, atol=cfg.atol,
+                              max_steps=cfg.max_steps)
+
+
+def _mali_adaptive_fwd(cfg, params, z0, t0, t1):
+    out = _mali_adaptive_forward(cfg, params, z0, t0, t1)
+    zT, vT = out.state
+    # Residuals: end state + O(max_steps) scalars (the accepted h_i / t_i) —
+    # still O(N_z) in the state dimension, constant in step count.
+    res = (params, zT, vT, out.ts, out.hs, out.n_accepted, t0, t1)
+    return zT, res
+
+
+def _mali_adaptive_bwd(cfg, res, g_zT):
+    params, zT, vT, ts, hs, n_acc, t0, t1 = res
+
+    def body(carry, t_start, h, _extra):
+        z_i, v_i, a_z, a_v, g_p = carry
+        if cfg.fused_bwd:
+            z_prev, v_prev, dz, dv, dp = _fused_inverse_and_vjp(
+                cfg.f, cfg.eta, params, z_i, v_i, t_start + h, h, a_z, a_v)
+        else:
+            z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i,
+                                         t_start + h, h, cfg.eta)
+            dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev,
+                                         v_prev, t_start, h, a_z, a_v)
+        return (z_prev, v_prev, dz, dv, tree_add(g_p, dp))
+
+    carry0 = (zT, vT, g_zT, tree_zeros_like(vT), tree_zeros_like(params))
+    z0_rec, v0_rec, a_z, a_v, g_params = reverse_masked_scan(
+        body, carry0, ts, hs, n_acc, cfg.max_steps)
+
+    g_params, a_z = _close_v0_vjp(cfg.f, params, z0_rec, t0, a_z, a_v, g_params)
+    zero_t = jnp.zeros_like(jnp.asarray(t0))
+    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+
+
+_mali_adaptive.defvjp(_mali_adaptive_fwd, _mali_adaptive_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def odeint_mali(f: Dynamics, params: Pytree, z0: Pytree,
+                t0=0.0, t1=1.0, *, n_steps: int = 0, eta: float = 1.0,
+                rtol: float = 1e-2, atol: float = 1e-3,
+                max_steps: int = 64, fused_bwd: bool = True) -> Pytree:
+    """Integrate dz/dt = f(params, z, t) from t0 to t1 with MALI gradients.
+
+    ``n_steps > 0`` selects the fixed uniform grid (the paper's large-scale
+    setting, e.g. h=0.25 -> n_steps=4 on [0,1]); ``n_steps == 0`` selects the
+    adaptive controller with ``rtol/atol`` and a ``max_steps`` trial budget.
+    """
+    check_eta(eta)
+    t0 = jnp.asarray(t0, jnp.float32)
+    t1 = jnp.asarray(t1, jnp.float32)
+    cfg = MaliConfig(f, int(n_steps), float(eta), float(rtol), float(atol),
+                     int(max_steps), bool(fused_bwd))
+    if n_steps > 0:
+        return _mali_fixed(cfg, params, z0, t0, t1)
+    return _mali_adaptive(cfg, params, z0, t0, t1)
+
+
+def mali_forward_stats(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0,
+                       t1=1.0, *, eta: float = 1.0, rtol: float = 1e-2,
+                       atol: float = 1e-3, max_steps: int = 64):
+    """Adaptive forward only, returning (zT, n_accepted, n_evals) for
+    benchmarking the paper's m / N_t accounting."""
+    check_eta(eta)
+    cfg = MaliConfig(f, 0, float(eta), float(rtol), float(atol), int(max_steps))
+    out = _mali_adaptive_forward(cfg, params, z0, jnp.asarray(t0, jnp.float32),
+                                 jnp.asarray(t1, jnp.float32))
+    return out.state[0], out.n_accepted, out.n_evals

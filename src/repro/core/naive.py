@@ -1,0 +1,76 @@
+"""Naive method: backpropagate directly through the solver loop.
+
+In JAX this is simply a *differentiable* integration loop: XLA keeps every
+per-step intermediate alive for the backward pass, so residual memory grows
+with the number of (trial) steps — including the rejected stepsize-search
+trials in the adaptive case, exactly the paper's characterization (memory
+N_z*N_f*N_t*m, graph depth N_f*N_t*m).
+
+Supports the RK tableaus and the ALF solver (augmented (z, v) state with
+v0 = f(z0, t0)); the latter gives the gradient-equivalence oracle for MALI:
+naive-ALF and MALI must agree to float precision on the same fixed grid.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .alf import alf_step, alf_step_with_error, check_eta, init_velocity
+from .integrate import integrate_adaptive, integrate_fixed
+from .solvers import ButcherTableau, get_solver
+from .stepsize import error_ratio
+
+Pytree = Any
+Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+
+
+def odeint_naive(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
+                 solver: str = "alf", n_steps: int = 0, eta: float = 1.0,
+                 rtol: float = 1e-2, atol: float = 1e-3,
+                 max_steps: int = 64) -> Pytree:
+    t0 = jnp.asarray(t0, jnp.float32)
+    t1 = jnp.asarray(t1, jnp.float32)
+    sol = get_solver(solver)
+
+    if solver == "alf":
+        check_eta(eta)
+        v0 = init_velocity(f, params, z0, t0)
+
+        if n_steps > 0:
+            def step(state, t, h):
+                z, v = state
+                return alf_step(f, params, z, v, t, h, eta)
+
+            zT, _ = integrate_fixed(step, (z0, v0), t0, t1, n_steps)
+            return zT
+
+        def trial(state, t, h):
+            z, v = state
+            z1, v1, err = alf_step_with_error(f, params, z, v, t, h, eta)
+            return (z1, v1), error_ratio(err, z, z1, rtol, atol)
+
+        out = integrate_adaptive(trial, (z0, v0), t0, t1, order=2, rtol=rtol,
+                                 atol=atol, max_steps=max_steps)
+        return out.state[0]
+
+    assert isinstance(sol, ButcherTableau)
+    if n_steps > 0:
+        def step(z, t, h):
+            z1, _ = sol.step(f, params, z, t, h)
+            return z1
+
+        return integrate_fixed(step, z0, t0, t1, n_steps)
+
+    if sol.b_err is None:
+        raise ValueError(f"solver {solver!r} has no embedded error estimate; "
+                         "pass n_steps for fixed-step integration")
+
+    def trial(z, t, h):
+        z1, err = sol.step(f, params, z, t, h)
+        return z1, error_ratio(err, z, z1, rtol, atol)
+
+    out = integrate_adaptive(trial, z0, t0, t1, order=sol.order, rtol=rtol,
+                             atol=atol, max_steps=max_steps)
+    return out.state

@@ -1,0 +1,51 @@
+"""ODEBlock: the paper's technique as a composable neural-network module.
+
+A residual block ``y = x + g(x)`` is the one-step Euler discretization of
+``dz/dt = g(z, t)``; an ODEBlock replaces the discrete residual with a
+continuous integration ``y = z(T), z(0) = x`` (paper Sec 4.2), sharing the
+same parameterization g. The gradient method (MALI / adjoint / ACA / naive),
+solver, step count/tolerances and damping are all config knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from .api import odeint
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OdeSettings:
+    """Integrator settings carried by model configs (hashable/static)."""
+    mode: str = "off"          # 'off' | 'per_block'
+    method: str = "mali"       # gradient method
+    solver: str = "alf"
+    n_steps: int = 2           # 0 = adaptive
+    t1: float = 1.0
+    eta: float = 1.0           # ALF damping
+    rtol: float = 1e-2
+    atol: float = 1e-3
+    max_steps: int = 32
+    fused_bwd: bool = True     # share psi^-1's f-eval with the local VJP
+
+    def validate(self) -> "OdeSettings":
+        if self.mode not in ("off", "per_block"):
+            raise ValueError(f"bad ode.mode {self.mode!r}")
+        if self.method == "mali" and self.solver != "alf":
+            raise ValueError("MALI requires the ALF solver")
+        return self
+
+
+def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],
+              settings: OdeSettings) -> Callable[[Pytree, Pytree], Pytree]:
+    """Wrap ``dynamics(params, z, t)`` into ``apply(params, x) -> z(T)``."""
+    s = settings.validate()
+
+    def apply(params: Pytree, x: Pytree) -> Pytree:
+        return odeint(dynamics, params, x, 0.0, s.t1, method=s.method,
+                      solver=s.solver, n_steps=s.n_steps, eta=s.eta,
+                      rtol=s.rtol, atol=s.atol, max_steps=s.max_steps)
+
+    return apply

@@ -1,0 +1,148 @@
+"""Runge-Kutta solver steps (pytree-generic) + the ALF solver adapter.
+
+Each solver exposes::
+
+    solver.step(f, params, z, t, h) -> (z_next, err)   # err=None if no pair
+    solver.order                                        # classical order
+
+These are the ``psi`` functions of paper Algo 1. ALF is special: it carries
+the augmented state ``(z, v)`` and is handled by the integrators directly
+(see core/mali.py); :data:`ALF` here only records metadata so the benchmark /
+config layer can treat solver choice uniformly.
+
+Tableaus: Euler, Heun2 (a.k.a. Heun-Euler when used with its embedded Euler
+error — the solver ACA used in the paper), explicit midpoint, Bogacki-
+Shampine 3(2) ("RK23"), classic RK4, and Dormand-Prince 5(4) ("Dopri5").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_tm = jax.tree_util.tree_map
+
+Pytree = Any
+Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+
+
+def _weighted_sum(terms: Sequence[Tuple[float, Pytree]]) -> Optional[Pytree]:
+    """sum(c_i * tree_i) skipping zero coefficients; None if all zero."""
+    terms = [(c, k) for (c, k) in terms if c != 0.0]
+    if not terms:
+        return None
+    acc = _tm(lambda x: terms[0][0] * x, terms[0][1])
+    for c, k in terms[1:]:
+        acc = _tm(lambda a, x: a + c * x, acc, k)
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class ButcherTableau:
+    name: str
+    order: int
+    c: Tuple[float, ...]
+    a: Tuple[Tuple[float, ...], ...]
+    b: Tuple[float, ...]
+    b_err: Optional[Tuple[float, ...]] = None  # b - b_hat (error weights)
+    fsal: bool = False
+
+    def step(self, f: Dynamics, params: Pytree, z: Pytree, t: jax.Array,
+             h: jax.Array) -> Tuple[Pytree, Optional[Pytree]]:
+        ks = []
+        for i, ci in enumerate(self.c):
+            incr = _weighted_sum(list(zip(self.a[i], ks)))
+            zi = z if incr is None else _tm(lambda zz, dd: zz + h * dd, z, incr)
+            ks.append(f(params, zi, t + ci * h))
+        upd = _weighted_sum(list(zip(self.b, ks)))
+        z_next = _tm(lambda zz, dd: zz + h * dd, z, upd)
+        err = None
+        if self.b_err is not None:
+            e = _weighted_sum(list(zip(self.b_err, ks)))
+            err = _tm(lambda x: h * x, e)
+        return z_next, err
+
+
+EULER = ButcherTableau("euler", 1, c=(0.0,), a=((),), b=(1.0,))
+
+# Heun's 2nd-order with embedded Euler -> the "Heun-Euler" adaptive pair.
+HEUN2 = ButcherTableau(
+    "heun2", 2,
+    c=(0.0, 1.0), a=((), (1.0,)), b=(0.5, 0.5),
+    b_err=(-0.5, 0.5),  # (heun - euler) weights
+)
+
+MIDPOINT = ButcherTableau(
+    "midpoint", 2, c=(0.0, 0.5), a=((), (0.5,)), b=(0.0, 1.0),
+)
+
+# Bogacki-Shampine 3(2) — torchdiffeq's "bosh3" / scipy "RK23".
+BOSH3 = ButcherTableau(
+    "bosh3", 3,
+    c=(0.0, 0.5, 0.75, 1.0),
+    a=((), (0.5,), (0.0, 0.75), (2 / 9, 1 / 3, 4 / 9)),
+    b=(2 / 9, 1 / 3, 4 / 9, 0.0),
+    b_err=(2 / 9 - 7 / 24, 1 / 3 - 0.25, 4 / 9 - 1 / 3, -0.125),
+    fsal=True,
+)
+
+RK4 = ButcherTableau(
+    "rk4", 4,
+    c=(0.0, 0.5, 0.5, 1.0),
+    a=((), (0.5,), (0.0, 0.5), (0.0, 0.0, 1.0)),
+    b=(1 / 6, 1 / 3, 1 / 3, 1 / 6),
+)
+
+# Dormand-Prince 5(4) — torchdiffeq default "dopri5".
+_DP_B = (35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0)
+_DP_BH = (5179 / 57600, 0.0, 7571 / 16695, 393 / 640, -92097 / 339200,
+          187 / 2100, 1 / 40)
+DOPRI5 = ButcherTableau(
+    "dopri5", 5,
+    c=(0.0, 0.2, 0.3, 0.8, 8 / 9, 1.0, 1.0),
+    a=(
+        (),
+        (0.2,),
+        (3 / 40, 9 / 40),
+        (44 / 45, -56 / 15, 32 / 9),
+        (19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729),
+        (9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656),
+        _DP_B[:-1] + (0.0,),
+    ),
+    b=_DP_B,
+    b_err=tuple(b - bh for b, bh in zip(_DP_B, _DP_BH)),
+    fsal=True,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlfSolverMeta:
+    """Marker for the ALF solver (augmented-state; handled by integrators)."""
+    name: str = "alf"
+    order: int = 2
+    b_err: Optional[Tuple[float, ...]] = (1.0,)  # has an embedded estimate
+
+
+ALF = AlfSolverMeta()
+
+SOLVERS = {
+    "euler": EULER,
+    "heun2": HEUN2,
+    "heun_euler": HEUN2,
+    "midpoint": MIDPOINT,
+    "bosh3": BOSH3,
+    "rk23": BOSH3,
+    "rk2": HEUN2,
+    "rk4": RK4,
+    "dopri5": DOPRI5,
+    "alf": ALF,
+}
+
+
+def get_solver(name: str):
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(f"unknown solver {name!r}; available: {sorted(SOLVERS)}")

@@ -1,0 +1,68 @@
+"""Adaptive step-size control (paper Algo 1) — PI controller + error norms.
+
+jit-friendly: everything is expressed as pure functions over scalars/pytrees;
+the accept/reject loop lives in the integrators (bounded ``lax.scan`` with
+masking so the same code path works under reverse-mode AD where needed).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_tm = jax.tree_util.tree_map
+
+# Classic Hairer-Norsett-Wanner defaults.
+SAFETY = 0.9
+MIN_FACTOR = 0.2     # paper's DecayFactor floor
+MAX_FACTOR = 10.0    # paper's IncreaseFactor ceiling
+
+
+def error_ratio(err: Any, z0: Any, z1: Any, rtol: float, atol: float) -> jax.Array:
+    """RMS of err scaled by atol + rtol*max(|z0|,|z1|). Accept iff <= 1."""
+    leaves_err = jax.tree_util.tree_leaves(err)
+    leaves_0 = jax.tree_util.tree_leaves(z0)
+    leaves_1 = jax.tree_util.tree_leaves(z1)
+    total = 0.0
+    count = 0
+    for e, a, b in zip(leaves_err, leaves_0, leaves_1):
+        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        r = (e / scale).astype(jnp.float32)
+        total = total + jnp.sum(r * r)
+        count += r.size
+    # safe sqrt: d(sqrt)/dx at exactly 0 is inf, which poisons reverse-mode
+    # AD through the adaptive loop (0-cotangent * inf = NaN) — the naive
+    # method differentiates through this code path.
+    ms = total / max(count, 1)
+    return jnp.sqrt(jnp.where(ms > 0, ms, 1.0)) * jnp.where(ms > 0, 1.0, 0.0)
+
+
+def next_step_size(h: jax.Array, ratio: jax.Array, order: int) -> jax.Array:
+    """PI-free single-exponent controller: h * clip(safety * ratio^(-1/(p+1)))."""
+    ratio = jnp.maximum(ratio, 1e-10)
+    factor = SAFETY * ratio ** (-1.0 / (order + 1))
+    factor = jnp.clip(factor, MIN_FACTOR, MAX_FACTOR)
+    return h * factor
+
+
+class AdaptState(NamedTuple):
+    """Carry for the bounded adaptive loop."""
+    t: jax.Array          # current time
+    h: jax.Array          # current proposed step
+    done: jax.Array       # bool: reached end time
+    n_accepted: jax.Array  # int32 accepted-step count
+    n_evals: jax.Array     # int32 f-eval count (incl. rejected)
+
+
+def clip_step_to_end(t: jax.Array, h: jax.Array, t1: jax.Array) -> jax.Array:
+    """Never step past the end time (sign-aware)."""
+    remaining = t1 - t
+    return jnp.where(jnp.abs(h) > jnp.abs(remaining), remaining, h)
+
+
+def initial_step_size(rtol: float, atol: float, span: jax.Array) -> jax.Array:
+    """Cheap initial h heuristic: a small fraction of the span, tol-scaled."""
+    base = jnp.abs(span) * 0.05
+    tol_scale = jnp.clip(jnp.sqrt(rtol + atol), 1e-4, 1.0)
+    return jnp.sign(span) * jnp.maximum(base * tol_scale, jnp.abs(span) * 1e-4)

@@ -1,0 +1,102 @@
+"""Fault tolerance & elasticity policy for the launcher.
+
+Posture for 1000+ nodes (DESIGN.md §6):
+
+* Checkpoint/restart: step-scoped async checkpoints (checkpoint/), restore
+  via ``restore_latest`` after any failure. Training state is
+  (params, opt_state, data_step) — the synthetic pipeline is a pure function
+  of step, so resume is exact.
+* Elastic re-mesh: on losing nodes, shrink the *data* axis (pure DP shrink is
+  loss-free: global batch is re-sharded over fewer replicas; the 'model' axis
+  is fixed by the param sharding). ``plan_elastic_mesh`` picks the largest
+  data axis that divides the global batch.
+* Straggler mitigation: shards are pure functions of (seed, step, shard), so
+  a slow/lost host's shard is reassigned by renumbering — no data movement.
+  ``reassign_shards`` computes the new host->shard map.
+* Retry loop: ``run_with_recovery`` wraps the train loop; transient failures
+  (preemption, DMA timeout — simulated by exceptions here) trigger
+  restore+re-mesh up to ``max_failures``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def n_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+
+def plan_elastic_mesh(n_available: int, model_size: int, global_batch: int,
+                      pods: int = 1) -> MeshPlan:
+    """Largest (pod, data, model) mesh fitting the surviving devices.
+
+    'model' is fixed (params are sharded over it); 'data' shrinks to the
+    largest divisor of global_batch that fits.
+    """
+    if n_available < model_size:
+        raise RuntimeError(
+            f"cannot re-mesh: {n_available} devices < model axis {model_size}")
+    max_data = n_available // (model_size * pods)
+    data = max_data
+    while data > 1 and global_batch % data:
+        data -= 1
+    if data < 1:
+        raise RuntimeError("no valid data axis")
+    return MeshPlan(pods, data, model_size)
+
+
+def reassign_shards(healthy_hosts: Sequence[int], n_shards: int
+                    ) -> Dict[int, List[int]]:
+    """Round-robin shard ownership over surviving hosts (deterministic)."""
+    hosts = sorted(healthy_hosts)
+    if not hosts:
+        raise RuntimeError("no healthy hosts")
+    out: Dict[int, List[int]] = {h: [] for h in hosts}
+    for s in range(n_shards):
+        out[hosts[s % len(hosts)]].append(s)
+    return out
+
+
+@dataclasses.dataclass
+class RecoveryStats:
+    failures: int = 0
+    restores: int = 0
+    last_error: Optional[str] = None
+
+
+def run_with_recovery(train_loop: Callable[[Optional[int]], int],
+                      restore_step: Callable[[], Optional[int]],
+                      max_failures: int = 3,
+                      backoff_s: float = 0.0) -> Tuple[int, RecoveryStats]:
+    """Run ``train_loop(resume_step) -> final_step`` with restart-on-failure.
+
+    ``restore_step()`` returns the latest checkpointed step (None = fresh).
+    """
+    stats = RecoveryStats()
+    while True:
+        resume = restore_step()
+        if resume is not None:
+            stats.restores += 1
+        try:
+            final = train_loop(resume)
+            return final, stats
+        except (RuntimeError, OSError, ValueError) as e:
+            stats.failures += 1
+            stats.last_error = f"{type(e).__name__}: {e}"
+            log.warning("training failure #%d: %s", stats.failures, e)
+            if stats.failures > max_failures:
+                raise
+            if backoff_s:
+                time.sleep(backoff_s)

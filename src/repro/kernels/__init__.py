@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU) + jnp oracles."""

@@ -1,0 +1,89 @@
+"""Pallas TPU kernels for the fused ALF state updates.
+
+Tiling: the state is flattened to [rows, 128] (lane-aligned) and tiled in
+(block_rows, 128) VMEM blocks — elementwise, so any tiling is valid; 128
+lanes match the VPU, block_rows sized so in+out blocks fit comfortably in
+VMEM (default 1024 rows -> 5 x 512KB f32 blocks per program).
+
+The step size ``h`` is prefetched as a scalar (SMEM) so one compiled kernel
+serves every step of an adaptive integration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 1024
+
+
+def _midpoint_kernel(h_ref, z_ref, v_ref, k1_ref, *, sign: float):
+    h = h_ref[0]
+    z = z_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    k1_ref[...] = (z + sign * v * (h * 0.5)).astype(k1_ref.dtype)
+
+
+def _update_kernel(h_ref, k1_ref, v_ref, u1_ref, z_out_ref, v_out_ref, *,
+                   eta: float):
+    h = h_ref[0]
+    k1 = k1_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    u1 = u1_ref[...].astype(jnp.float32)
+    v_out = v + 2.0 * eta * (u1 - v)
+    v_out_ref[...] = v_out.astype(v_out_ref.dtype)
+    z_out_ref[...] = (k1 + v_out * (h * 0.5)).astype(z_out_ref.dtype)
+
+
+def _inverse_update_kernel(h_ref, k1_ref, vo_ref, u1_ref, z_in_ref, v_in_ref,
+                           *, eta: float):
+    h = h_ref[0]
+    k1 = k1_ref[...].astype(jnp.float32)
+    vo = vo_ref[...].astype(jnp.float32)
+    u1 = u1_ref[...].astype(jnp.float32)
+    if eta == 1.0:
+        v_in = 2.0 * u1 - vo
+    else:
+        v_in = (vo - 2.0 * eta * u1) * (1.0 / (1.0 - 2.0 * eta))
+    v_in_ref[...] = v_in.astype(v_in_ref.dtype)
+    z_in_ref[...] = (k1 - v_in * (h * 0.5)).astype(z_in_ref.dtype)
+
+
+def _tiled_call(kernel, args, n_out, block_rows=BLOCK_ROWS, interpret=True):
+    """args: (h_scalar, *arrays) with arrays pre-shaped [rows, LANES]."""
+    h, *arrays = args
+    rows = arrays[0].shape[0]
+    bs = min(block_rows, rows)
+    grid = (rows // bs,)
+    spec = pl.BlockSpec((bs, LANES), lambda i: (i, 0))
+    out_shape = tuple(
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays[:n_out])
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] + [spec] * len(arrays),
+        out_specs=(spec,) * n_out if n_out > 1 else spec,
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )
+    return fn(jnp.asarray(h, jnp.float32).reshape(1), *arrays)
+
+
+def midpoint_call(z, v, h, *, sign=1.0, interpret=True, block_rows=BLOCK_ROWS):
+    return _tiled_call(functools.partial(_midpoint_kernel, sign=sign),
+                       (h, z, v), 1, block_rows, interpret)
+
+
+def update_call(k1, v, u1, h, *, eta=1.0, interpret=True,
+                block_rows=BLOCK_ROWS):
+    return _tiled_call(functools.partial(_update_kernel, eta=eta),
+                       (h, k1, v, u1), 2, block_rows, interpret)
+
+
+def inverse_update_call(k1, v_out, u1, h, *, eta=1.0, interpret=True,
+                        block_rows=BLOCK_ROWS):
+    return _tiled_call(functools.partial(_inverse_update_kernel, eta=eta),
+                       (h, k1, v_out, u1), 2, block_rows, interpret)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused ALF state-update kernels.
+
+These are the elementwise algebra of paper Algo 2/3 *between* the two f
+evaluations — the part MALI executes once per step in forward and twice per
+step (inverse + replay) in backward. Fusing them avoids ~6 HBM round-trips
+of the full model state per solver step on TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def midpoint_ref(z: jnp.ndarray, v: jnp.ndarray, h, sign: float = 1.0):
+    """k1 = z + sign * v * h/2 (sign=-1 gives the inverse's midpoint)."""
+    return (z.astype(jnp.float32)
+            + sign * v.astype(jnp.float32) * (h / 2)).astype(z.dtype)
+
+
+def update_ref(k1: jnp.ndarray, v: jnp.ndarray, u1: jnp.ndarray, h,
+               eta: float = 1.0):
+    """Forward tail: v_out = v + 2*eta*(u1 - v); z_out = k1 + v_out*h/2."""
+    k1f = k1.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    uf = u1.astype(jnp.float32)
+    v_out = vf + 2.0 * eta * (uf - vf)
+    z_out = k1f + v_out * (h / 2)
+    return z_out.astype(k1.dtype), v_out.astype(v.dtype)
+
+
+def inverse_update_ref(k1: jnp.ndarray, v_out: jnp.ndarray, u1: jnp.ndarray,
+                       h, eta: float = 1.0):
+    """Inverse tail: v_in from (u1, v_out); z_in = k1 - v_in*h/2."""
+    k1f = k1.astype(jnp.float32)
+    vf = v_out.astype(jnp.float32)
+    uf = u1.astype(jnp.float32)
+    if eta == 1.0:
+        v_in = 2.0 * uf - vf
+    else:
+        v_in = (vf - 2.0 * eta * uf) / (1.0 - 2.0 * eta)
+    z_in = k1f - v_in * (h / 2)
+    return z_in.astype(k1.dtype), v_in.astype(v_out.dtype)

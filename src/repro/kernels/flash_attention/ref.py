@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for causal GQA flash attention (+softcap, window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """q: [B, Sq, H, d]; k/v: [B, Sk, K, d] with H % K == 0. f32 math."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) * (d ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    keep = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        keep &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        keep &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused selective scan.
+
+y[b,t,i] = C[b,t,:] . h[b,t,i,:]
+h[b,t]   = exp(delta[b,t,i] * A[i,:]) * h[b,t-1] + (delta*u)[b,t,i] * B[b,t,:]
+
+(the discretized diagonal SSM of Mamba; A is the raw negative-real matrix,
+i.e. already -exp(A_log)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(delta: jnp.ndarray, u: jnp.ndarray, A: jnp.ndarray,
+                       B: jnp.ndarray, C: jnp.ndarray,
+                       h0: jnp.ndarray | None = None):
+    """delta/u: [Bt, S, DI]; A: [DI, ST]; B/C: [Bt, S, ST]; h0: [Bt, DI, ST].
+    Returns (y [Bt, S, DI] f32, h_final [Bt, DI, ST] f32)."""
+    bt, s, di = delta.shape
+    st = A.shape[1]
+    dA = jnp.exp(delta.astype(jnp.float32)[..., None]
+                 * A.astype(jnp.float32))                      # [Bt,S,DI,ST]
+    dBu = (delta.astype(jnp.float32) * u.astype(jnp.float32))[..., None] \
+        * B.astype(jnp.float32)[..., None, :]                  # [Bt,S,DI,ST]
+    h = jnp.zeros((bt, di, st), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        dA_t, dBu_t, c_t = xs
+        h = dA_t * h + dBu_t
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h, (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+                  jnp.moveaxis(C.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h

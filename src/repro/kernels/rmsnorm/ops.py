@@ -1,0 +1,28 @@
+"""jit'd wrapper for the fused RMSNorm kernel (jnp fallback on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .rmsnorm import rmsnorm_call
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas"))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            use_pallas: bool = False) -> jax.Array:
+    """x: [..., d]; scale: [d]."""
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, scale, eps)
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    # pick a block size dividing rows
+    bs = 256
+    while rows % bs:
+        bs //= 2
+    out = rmsnorm_call(x2, scale, eps, block_rows=max(bs, 1))
+    return out.reshape(shape)

@@ -1,0 +1,61 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these; train.py/serve.py feed real arrays of the same specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import init_cache, init_lm
+from repro.models.lm import ServeState
+
+Pytree = Any
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Training / prefill batch input specs at the cell's global shape."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.input_mode == "embeds":
+        specs = {"embeds": jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype))}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cell.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, cell: ShapeCell) -> Any:
+    b = cell.global_batch
+    if cfg.input_mode == "embeds":
+        return jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+    return jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+
+def param_specs(cfg: ModelConfig) -> Pytree:
+    """Abstract parameter tree (no allocation)."""
+    return jax.eval_shape(lambda k: init_lm(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def serve_state_specs(cfg: ModelConfig, cell: ShapeCell) -> ServeState:
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+    return ServeState(cache, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """All step-function inputs for this (arch x shape) cell."""
+    out: Dict[str, Any] = {"batch": batch_specs(cfg, cell)}
+    if cell.kind == "decode":
+        out["tokens"] = decode_token_specs(cfg, cell)
+        out["state"] = serve_state_specs(cfg, cell)
+    elif cell.kind == "prefill":
+        out["state"] = serve_state_specs(cfg, cell)
+    return out

@@ -1,0 +1,97 @@
+"""Step-function builders: the jit targets for training and serving.
+
+``make_train_step`` returns the full production step — loss, grads
+(optionally micro-batched accumulation, optionally int8 error-feedback
+gradient compression), clip, AdamW/SGD update — as a pure function
+(params, opt_state[, ef_state], batch) -> (params, opt_state[, ef], metrics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, lm_loss, prefill
+from repro.models.lm import ServeState
+from repro.optim.compression import EFState, compress_grads
+from repro.optim.optimizer import OptimizerConfig, OptState, apply_updates
+
+Pytree = Any
+_tm = jax.tree_util.tree_map
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable[[Pytree, Pytree], jax.Array]:
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+    return loss_fn
+
+
+def _split_microbatches(batch: Pytree, n: int) -> Pytree:
+    return _tm(lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                    microbatches: int = 1, compress: bool = False,
+                    grad_shardings=None):
+    """grad_shardings: optional NamedSharding tree applied to the gradients
+    before the optimizer — with ZeRO-1-sharded optimizer state this turns
+    the DP gradient all-reduce into a reduce-scatter (the update then runs
+    sharded and the new params are all-gathered by out_shardings)."""
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mbs = _split_microbatches(batch, microbatches)
+
+        def acc(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss, _tm(jnp.add, g_acc, g)), None
+
+        zeros = _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = lax.scan(acc, (jnp.float32(0.0), zeros), mbs)
+        inv = 1.0 / microbatches
+        return loss * inv, _tm(lambda g: g * inv, grads)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+    if compress:
+        def train_step(params, opt_state: OptState, ef: EFState, batch):
+            loss, grads = grads_of(params, batch)
+            grads = constrain(grads)
+            grads, ef = compress_grads(grads, ef)
+            params, opt_state, metrics = apply_updates(
+                opt_cfg, params, grads, opt_state)
+            metrics["loss"] = loss
+            return params, opt_state, ef, metrics
+        return train_step
+
+    def train_step(params, opt_state: OptState, batch):
+        loss, grads = grads_of(params, batch)
+        grads = constrain(grads)
+        params, opt_state, metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, state: ServeState):
+        return prefill(params, cfg, batch, state)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, tokens, state: ServeState):
+        return decode_step(params, cfg, tokens, state)
+    return serve_step

@@ -1,0 +1,27 @@
+"""Stub modality frontends for the [audio]/[vlm] archs.
+
+Per the assignment, the transformer BACKBONE is what's specified; the
+modality frontend (EnCodec for musicgen, InternViT for internvl2) is a STUB:
+``input_specs()`` (see launch/dryrun.py) provides precomputed frame/patch
+embeddings. These helpers generate deterministic synthetic embeddings with
+the right shapes/dtypes for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_frame_embeddings(key: jax.Array, cfg: ModelConfig, batch: int,
+                               seq_len: int) -> jax.Array:
+    """Stand-in for EnCodec frame / ViT patch embeddings: [B, S, D]."""
+    x = jax.random.normal(key, (batch, seq_len, cfg.d_model), jnp.float32)
+    return (x * 0.02).astype(jnp.dtype(cfg.compute_dtype))
+
+
+def synthetic_labels(key: jax.Array, cfg: ModelConfig, batch: int,
+                     seq_len: int) -> jax.Array:
+    return jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size,
+                              jnp.int32)

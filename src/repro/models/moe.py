@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN: top-k softmax router, capacity-bounded dispatch,
+optional shared experts (DeepSeekMoE-style fine-grained + shared).
+
+Dispatch is the GShard dense-einsum formulation — one-hot dispatch/combine
+tensors contracted against the token batch — which shards cleanly under
+GSPMD with the expert axis on the 'model' mesh axis (expert parallelism);
+XLA lowers the dispatch einsums to all-to-alls when profitable.
+
+Routing is a deterministic function of (z, t) ⇒ the ALF inverse re-derives
+identical routing decisions during MALI's backward reconstruction (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import dense_init, silu
+from .mlp import apply_mlp, init_mlp
+
+Pytree = Any
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Pytree:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, e, dff = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff or cfg.d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(kr, (d, e), jnp.float32),  # router kept f32
+        "w_gate": dense_init(kg, (e, d, dff), dt),
+        "w_up": dense_init(ku, (e, d, dff), dt),
+        "w_down": dense_init(kd, (e, dff, d), dt, fan_in=dff),
+    }
+    if cfg.moe_shared_experts > 0:
+        params["shared"] = init_mlp(ks, cfg, dff * cfg.moe_shared_experts)
+    return params
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig, factor: float) -> int:
+    cap = int(math.ceil(n_tokens * cfg.moe_top_k / cfg.moe_experts * factor))
+    return max(min(cap, n_tokens), cfg.moe_top_k)
+
+
+def apply_moe(params: Pytree, cfg: ModelConfig, x: jax.Array,
+              eval_mode: bool = False) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D]. eval_mode uses the (laxer) serve-time
+    capacity factor — inference should be (near-)dropless."""
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(b * s, d)
+    n = b * s
+    factor = cfg.moe_eval_capacity_factor if eval_mode else cfg.moe_capacity_factor
+    cap = _capacity(n, cfg, factor)
+
+    logits = xt.astype(jnp.float32) @ params["router"]          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [N, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renormalize
+
+    # Position of each (token, choice) within its expert's capacity buffer —
+    # scatter/gather dispatch (MegaBlocks-style), O(N*k) memory instead of
+    # the GShard dense [N, E, cap] tensors (infeasible for fine-grained MoE).
+    # Rank-within-expert via a stable int32 argsort instead of a cumsum over
+    # a [N*k, E] f32 one-hot (100+ MB and a log-pass cumsum at DeepSeek's
+    # E=64): sort the expert ids, rank = index - group start, scatter back.
+    eidx = gate_idx.reshape(-1)                                 # [N*k]
+    order = jnp.argsort(eidx, stable=True)
+    sorted_e = eidx[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=eidx.dtype),
+                                   side="left")                 # [E]
+    pos_sorted = (jnp.arange(n * k, dtype=jnp.int32)
+                  - group_start[sorted_e].astype(jnp.int32))
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = (pos < cap) & (gate_vals.reshape(-1) > 0)
+    pos_safe = jnp.minimum(pos, cap - 1)
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x_rep = jnp.repeat(xt, k, axis=0)                           # [N*k, D]
+    contrib = jnp.where(keep[:, None], x_rep, 0).astype(cdt)
+    expert_in = jnp.zeros((e, cap, d), cdt).at[eidx, pos_safe].add(contrib)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", silu(h) * u, params["w_down"])
+    gathered = expert_out[eidx, pos_safe]                       # [N*k, D]
+    w = (gate_vals.reshape(-1) * keep).astype(cdt)
+    out = (gathered * w[:, None]).reshape(n, k, d).sum(axis=1)
+
+    if cfg.moe_shared_experts > 0:
+        out = out + apply_mlp(params["shared"], xt)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(params: Pytree, cfg: ModelConfig,
+                          x: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss (fraction * prob)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.moe_experts), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    return cfg.moe_experts * jnp.sum(frac * mean_prob)

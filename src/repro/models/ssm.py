@@ -1,0 +1,179 @@
+"""Mamba (selective SSM) mixer — the Jamba hybrid's dominant layer type.
+
+Train/prefill path: chunked selective scan — ``lax.scan`` over sequence
+chunks carrying the SSM state, with a parallel ``associative_scan`` inside
+each chunk and ``jax.checkpoint`` around the chunk body so the backward pass
+recomputes chunk internals instead of storing O(S * d_inner * d_state)
+activations (which at Jamba scale would be tens of GB per chip).
+
+Decode path: O(1) recurrent update against a (conv_state, ssm_state) cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import hint
+from .common import dense_init, silu
+
+Pytree = Any
+
+_CHUNK = 4096
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Pytree:
+    dt = jnp.dtype(cfg.param_dtype)
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * d_inner), dt),
+        "conv_w": dense_init(keys[1], (d_conv, d_inner), dt, fan_in=d_conv),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "x_proj": dense_init(keys[2], (d_inner, dt_rank + 2 * d_state), dt,
+                             fan_in=d_inner),
+        "dt_proj": dense_init(keys[3], (dt_rank, d_inner), dt, fan_in=dt_rank),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(a),                                  # f32
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(keys[4], (d_inner, d), dt, fan_in=d_inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over S. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_inputs(params: Pytree, cfg: ModelConfig, u: jax.Array):
+    """u: [B, S, d_inner] -> (dA, dBu, C) discretized per-token terms."""
+    d_inner, dt_rank, d_state, _ = _dims(cfg)
+    proj = u @ params["x_proj"]
+    dt_raw, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        (dt_raw @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                              # [d_inner, S_st]
+    dA = jnp.exp(delta[..., None] * a)                         # [B,S,di,st]
+    dBu = (delta * u.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[..., None, :]                # [B,S,di,st]
+    return dA, dBu, c_mat.astype(jnp.float32)
+
+
+def _scan_chunk(carry, chunk):
+    """carry: h [B,di,st]; chunk: (dA, dBu) of [B,c,di,st]."""
+    dA, dBu = chunk
+
+    def combine(left, right):
+        aL, bL = left
+        aR, bR = right
+        return aL * aR, bL * aR + bR
+
+    a_cum, b_cum = lax.associative_scan(combine, (dA, dBu), axis=1)
+    h_all = a_cum * carry[:, None] + b_cum                     # [B,c,di,st]
+    return h_all[:, -1], h_all
+
+
+def apply_mamba_train(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                      chunk: int = _CHUNK, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (+ final (conv_state, ssm_state) if asked —
+    requires S % chunk == 0 so the final scan carry is exact)."""
+    b, s, d = x.shape
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    ui, res = jnp.split(x @ params["in_proj"], 2, axis=-1)
+    u = silu(_causal_conv(ui, params["conv_w"], params["conv_b"]))
+
+    c = min(chunk, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if return_state and pad:
+        raise ValueError("prefill requires seq_len % chunk == 0")
+    u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0))) if pad else u
+
+    dA, dBu, c_mat = _ssm_inputs(params, cfg, u_p)
+    # pin batch->dp, d_inner->model: without these GSPMD replicates the
+    # batch dim of the scan carry across 'data' (16x blowup; §Perf)
+    dA = hint(dA, "batch", None, "model", None)
+    dBu = hint(dBu, "batch", None, "model", None)
+    dA = dA.reshape(b, n_chunks, c, d_inner, d_state)
+    dBu = dBu.reshape(b, n_chunks, c, d_inner, d_state)
+
+    @jax.checkpoint
+    def chunk_body(h, ch):
+        return _scan_chunk(h, ch)
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    h_last, h_seq = lax.scan(chunk_body, h0,
+                             (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0)))
+    h_seq = jnp.moveaxis(h_seq, 0, 1).reshape(b, n_chunks * c, d_inner, d_state)
+    h_seq = hint(h_seq, "batch", None, "model", None)
+    h_seq = h_seq[:, :s]
+    # y[b,t,i] = sum_s h[b,t,i,s] * C[b,t,s]
+    y = jnp.einsum("btis,bts->bti", h_seq, c_mat[:, :s])
+    y = y + params["D"] * u.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * silu(res)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    conv_state = ui[:, s - (d_conv - 1):].astype(jnp.float32)
+    return out, (conv_state, h_last)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [n_slots, B, d_conv-1, d_inner]
+    ssm: jax.Array    # [n_slots, B, d_inner, d_state]
+
+    @staticmethod
+    def init(cfg: ModelConfig, n_slots: int, batch: int):
+        d_inner, _, d_state, d_conv = _dims(cfg)
+        return MambaCache(
+            jnp.zeros((n_slots, batch, d_conv - 1, d_inner), jnp.float32),
+            jnp.zeros((n_slots, batch, d_inner, d_state), jnp.float32))
+
+
+def apply_mamba_decode(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                       cache: MambaCache, slot) -> Tuple[jax.Array, MambaCache]:
+    """x: [B, 1, D] single-token recurrent update."""
+    b = x.shape[0]
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    ui, res = jnp.split(x[:, 0] @ params["in_proj"], 2, axis=-1)  # [B, di]
+
+    conv_state = lax.dynamic_index_in_dim(cache.conv, slot, 0, keepdims=False)
+    window = jnp.concatenate(
+        [conv_state, ui.astype(jnp.float32)[:, None]], axis=1)   # [B,d_conv,di]
+    u = silu(jnp.einsum("bkc,kc->bc", window,
+                        params["conv_w"].astype(jnp.float32))
+             + params["conv_b"].astype(jnp.float32))
+    new_conv = window[:, 1:]
+
+    dA, dBu, c_mat = _ssm_inputs(params, cfg, u[:, None])         # S=1
+    h_prev = lax.dynamic_index_in_dim(cache.ssm, slot, 0, keepdims=False)
+    h = dA[:, 0] * h_prev + dBu[:, 0]                            # [B,di,st]
+    y = jnp.einsum("bis,bs->bi", h, c_mat[:, 0])
+    y = y + params["D"] * u
+    y = (y.astype(x.dtype)) * silu(res)
+    out = (y @ params["out_proj"])[:, None]
+
+    cache = MambaCache(
+        conv=lax.dynamic_update_slice(
+            cache.conv, new_conv[None].astype(cache.conv.dtype),
+            (slot, 0, 0, 0)),
+        ssm=lax.dynamic_update_slice(
+            cache.ssm, h[None].astype(cache.ssm.dtype), (slot, 0, 0, 0)))
+    return out, cache

@@ -1,0 +1,272 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory + hidden
+mixing) blocks (Beck et al. 2024, arXiv:2405.04517).
+
+Both are token-axis recurrences; the depth-axis Neural-ODE wrapping (MALI)
+is orthogonal and composes cleanly (DESIGN.md §Arch-applicability).
+
+Train path scans over sequence chunks with ``jax.checkpoint`` around the
+chunk body (same memory strategy as ssm.py). Decode is an O(1) state update.
+
+mLSTM per-head state: matrix memory C [dk, dv], normalizer n [dk], and the
+log-domain gate stabilizer m (exp input gate + sigmoid/exp forget gate,
+stabilized as in the paper App. A).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from .common import dense_init, silu
+
+Pytree = Any
+
+_CHUNK = 64
+
+
+def _head_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    return nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    """mLSTM operates in the up-projected space: up = proj_factor * d."""
+    up = int(cfg.lstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    assert up % nh == 0
+    return up, nh, up // nh
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Pytree:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    up, nh, dh = _mlstm_dims(cfg)
+    keys = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(keys[0], (d, 2 * up), dt),      # value path + gate
+        "w_q": dense_init(keys[1], (up, nh * dh), dt, fan_in=up),
+        "w_k": dense_init(keys[2], (up, nh * dh), dt, fan_in=up),
+        "w_v": dense_init(keys[3], (up, nh * dh), dt, fan_in=up),
+        "w_i": dense_init(keys[4], (up, nh), dt, fan_in=up),
+        "w_f": dense_init(keys[5], (up, nh), dt, fan_in=up),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),       # open forget gates
+        "w_down": dense_init(keys[6], (up, d), dt, fan_in=up),
+        "out_norm": jnp.ones((up,), dt),
+    }
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C [B,H,dk,dv], n [B,H,dk], m [B,H]); one token."""
+    c_mem, n_mem, m = carry
+    q, k, v, i_raw, f_raw = inp                     # q/k/v [B,H,dh]; gates [B,H]
+    f_log = jax.nn.log_sigmoid(f_raw)               # log forget gate
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c_new = f_g[..., None, None] * c_mem + \
+        i_g[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_g[..., None] * n_mem + i_g[..., None] * k
+    h_num = jnp.einsum("bhkv,bhk->bhv", c_new, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def _mlstm_qkvif(params: Pytree, cfg: ModelConfig, u: jax.Array):
+    _, nh, dh = _mlstm_dims(cfg)
+    b, s, up = u.shape
+    scale = dh ** -0.5
+    q = (u @ params["w_q"]).reshape(b, s, nh, dh).astype(jnp.float32) * scale
+    k = (u @ params["w_k"]).reshape(b, s, nh, dh).astype(jnp.float32) * scale
+    v = (u @ params["w_v"]).reshape(b, s, nh, dh).astype(jnp.float32)
+    i_raw = (u @ params["w_i"]).astype(jnp.float32)
+    f_raw = (u @ params["w_f"]).astype(jnp.float32) + params["f_bias"]
+    return q, k, v, i_raw, f_raw
+
+
+def apply_mlstm_train(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                      chunk: int = _CHUNK, return_state: bool = False):
+    b, s, d = x.shape
+    _, nh, dh = _mlstm_dims(cfg)
+    u, gate = jnp.split(x @ params["w_up"], 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, cfg, u)
+
+    c = min(chunk, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if return_state and pad:
+        raise ValueError("prefill requires seq_len % chunk == 0")
+
+    def pad_r(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    seqs = jax.tree_util.tree_map(pad_r, (q, k, v, i_raw, f_raw))
+    # [B, n_chunks, c, ...] -> scan over chunk axis
+    seqs = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a.reshape((b, n_chunks, c) + a.shape[2:]), 1, 0),
+        seqs)
+
+    @jax.checkpoint
+    def chunk_body(carry, ch):
+        qc, kc, vc, ic, fc = ch  # [B, c, ...]
+        def tok(cr, t):
+            return _mlstm_step(cr, jax.tree_util.tree_map(lambda a: a[:, t],
+                                                          (qc, kc, vc, ic, fc)))
+        carry, hs = lax.scan(tok, carry, jnp.arange(c))
+        return carry, jnp.moveaxis(hs, 0, 1)  # [B, c, H, dh]
+
+    carry0 = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+              jnp.zeros((b, nh, dh), jnp.float32),
+              jnp.full((b, nh), -1e30, jnp.float32))
+    carry, h_chunks = lax.scan(chunk_body, carry0, seqs)
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape(b, n_chunks * c, nh * dh)[:, :s]
+    h = h.astype(x.dtype) * params["out_norm"] * silu(gate)
+    out = h @ params["w_down"]
+    if return_state:
+        return out, carry
+    return out
+
+
+class LstmCache(NamedTuple):
+    c: jax.Array   # mLSTM: [n_slots,B,H,dk,dv]; sLSTM: [n_slots,B,H,dh]
+    n: jax.Array
+    m: jax.Array   # [n_slots, B, H]
+    h: jax.Array   # sLSTM hidden (zeros-shaped for mLSTM)
+
+    @staticmethod
+    def init_mlstm(cfg: ModelConfig, n_slots: int, batch: int):
+        _, nh, dh = _mlstm_dims(cfg)
+        return LstmCache(
+            jnp.zeros((n_slots, batch, nh, dh, dh), jnp.float32),
+            jnp.zeros((n_slots, batch, nh, dh), jnp.float32),
+            jnp.full((n_slots, batch, nh), -1e30, jnp.float32),
+            jnp.zeros((n_slots, batch, 1), jnp.float32))
+
+    @staticmethod
+    def init_slstm(cfg: ModelConfig, n_slots: int, batch: int):
+        nh, dh = _head_dims(cfg)
+        return LstmCache(
+            jnp.zeros((n_slots, batch, nh, dh), jnp.float32),
+            jnp.zeros((n_slots, batch, nh, dh), jnp.float32),
+            jnp.full((n_slots, batch, nh), -1e30, jnp.float32),
+            jnp.zeros((n_slots, batch, nh, dh), jnp.float32))
+
+
+def apply_mlstm_decode(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                       cache: LstmCache, slot) -> Tuple[jax.Array, LstmCache]:
+    b = x.shape[0]
+    u, gate = jnp.split(x[:, 0] @ params["w_up"], 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, cfg, u[:, None])
+    sel = lambda a: lax.dynamic_index_in_dim(a, slot, 0, keepdims=False)
+    carry = (sel(cache.c), sel(cache.n), sel(cache.m))
+    (c_new, n_new, m_new), h = _mlstm_step(
+        carry, jax.tree_util.tree_map(lambda a: a[:, 0], (q, k, v, i_raw, f_raw)))
+    h = h.reshape(b, -1).astype(x.dtype) * params["out_norm"] * silu(gate)
+    out = (h @ params["w_down"])[:, None]
+    upd = lambda buf, val: lax.dynamic_update_slice(
+        buf, val[None].astype(buf.dtype), (slot,) + (0,) * val.ndim)
+    cache = LstmCache(upd(cache.c, c_new), upd(cache.n, n_new),
+                      upd(cache.m, m_new), cache.h)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Pytree:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    nh, dh = _head_dims(cfg)
+    keys = jax.random.split(key, 7)
+    return {
+        # input projections for (z, i, f, o) gates
+        "w_in": dense_init(keys[0], (d, 4 * d), dt),
+        # block-diagonal recurrent mixing per head (z, i, f, o)
+        "r_in": dense_init(keys[1], (4, nh, dh, dh), jnp.float32, fan_in=dh),
+        "bias": jnp.concatenate([jnp.zeros((3 * d,), jnp.float32),
+                                 jnp.full((d,), 0.0, jnp.float32)]),
+        "w_down": dense_init(keys[2], (d, d), dt),
+        "out_norm": jnp.ones((d,), dt),
+    }
+
+
+def _slstm_step(params, cfg, carry, x_t):
+    """carry: (c, n, m, h) each [B,H,dh] (m is [B,H]); x_t [B, 4*d] pre-proj."""
+    nh, dh = _head_dims(cfg)
+    c_mem, n_mem, m, h_prev = carry
+    b = x_t.shape[0]
+    rec = jnp.einsum("ghij,bhj->bghi", params["r_in"],
+                     h_prev.astype(jnp.float32))        # [B,4,H,dh]
+    pre = x_t.astype(jnp.float32).reshape(b, 4, nh, dh) + rec + \
+        params["bias"].reshape(4, nh, dh)
+    z_t = jnp.tanh(pre[:, 0])
+    i_raw = pre[:, 1].mean(-1)                          # per-head gates [B,H]
+    f_raw = pre[:, 2].mean(-1)
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)[..., None]
+    f_g = jnp.exp(f_log + m - m_new)[..., None]
+    c_new = f_g * c_mem + i_g * z_t
+    n_new = f_g * n_mem + i_g
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm_train(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                      chunk: int = _CHUNK, return_state: bool = False):
+    b, s, d = x.shape
+    nh, dh = _head_dims(cfg)
+    pre = x @ params["w_in"]                            # [B,S,4d]
+
+    c = min(chunk, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if return_state and pad:
+        raise ValueError("prefill requires seq_len % chunk == 0")
+    pre_p = jnp.pad(pre, ((0, 0), (0, pad), (0, 0)))
+    pre_p = jnp.moveaxis(pre_p.reshape(b, n_chunks, c, 4 * d), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(carry, ch):
+        def tok(cr, t):
+            return _slstm_step(params, cfg, cr, ch[:, t])
+        carry, hs = lax.scan(tok, carry, jnp.arange(c))
+        return carry, jnp.moveaxis(hs, 0, 1)
+
+    carry0 = (jnp.zeros((b, nh, dh), jnp.float32),
+              jnp.zeros((b, nh, dh), jnp.float32),
+              jnp.full((b, nh), -1e30, jnp.float32),
+              jnp.zeros((b, nh, dh), jnp.float32))
+    carry, h_chunks = lax.scan(chunk_body, carry0, pre_p)
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape(b, n_chunks * c, d)[:, :s]
+    h = h.astype(x.dtype) * params["out_norm"]
+    out = h @ params["w_down"]
+    if return_state:
+        return out, carry
+    return out
+
+
+def apply_slstm_decode(params: Pytree, cfg: ModelConfig, x: jax.Array,
+                       cache: LstmCache, slot) -> Tuple[jax.Array, LstmCache]:
+    b = x.shape[0]
+    pre = x[:, 0] @ params["w_in"]
+    sel = lambda a: lax.dynamic_index_in_dim(a, slot, 0, keepdims=False)
+    carry = (sel(cache.c), sel(cache.n), sel(cache.m), sel(cache.h))
+    (c_new, n_new, m_new, h_new), h = _slstm_step(params, cfg, carry, pre)
+    out_h = h.reshape(b, -1).astype(x.dtype) * params["out_norm"]
+    out = (out_h @ params["w_down"])[:, None]
+    upd = lambda buf, val: lax.dynamic_update_slice(
+        buf, val[None].astype(buf.dtype), (slot,) + (0,) * val.ndim)
+    cache = LstmCache(upd(cache.c, c_new), upd(cache.n, n_new),
+                      upd(cache.m, m_new), upd(cache.h, h_new))
+    return out, cache

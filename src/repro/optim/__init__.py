@@ -1,0 +1,3 @@
+from .optimizer import (OptimizerConfig, OptState, apply_updates,
+                        init_opt_state, lr_schedule)
+from .compression import EFState, compress_grads, init_ef_state

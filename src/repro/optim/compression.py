@@ -1,0 +1,62 @@
+"""Gradient compression: int8 quantization with error feedback (1-bit-Adam /
+EF-SGD family). Used around the data-parallel gradient reduction: each
+replica quantizes its local gradient contribution, the residual is carried
+to the next step, so compression error does not accumulate.
+
+In the GSPMD execution model the all-reduce is implicit in the sharding, so
+this module exposes the quantize/dequantize pair + error-feedback state; the
+train step applies Q(g + e) -> dequant -> optimizer, e' = (g + e) - deq.
+On a real deployment the int8 payload is what crosses ICI/DCN (a shard_map
+psum over the int8 payload with i32 accumulation); here the numerics —
+which is what affects training — are exact, and the bytes saving is
+accounted analytically in the roofline (§Perf discussion).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+_tm = jax.tree_util.tree_map
+
+
+class EFState(NamedTuple):
+    error: Pytree   # f32 residual per param
+
+
+def init_ef_state(params: Pytree) -> EFState:
+    return EFState(_tm(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Pytree, ef: EFState) -> Tuple[Pytree, EFState]:
+    """Error-feedback int8 round-trip: returns (deq_grads, new_ef)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    out = _tm(one, grads, ef.error)
+    deq = _tm(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    err = _tm(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+    return deq, EFState(err)
+
+
+def compressed_bytes(grads: Pytree) -> int:
+    """Wire bytes if the DP reduction carried int8 payloads (for §Roofline)."""
+    return sum(l.size for l in jax.tree_util.tree_leaves(grads))

@@ -1,0 +1,39 @@
+"""Shared fixtures/helpers. NOTE: no XLA_FLAGS here — tests must see the
+real single CPU device (the 512-device override is dryrun.py-only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def linear_dynamics(A):
+    """dz/dt = A @ z (matrix params)."""
+    def f(params, z, t):
+        return params @ z
+    return f
+
+
+def mlp_dynamics():
+    """Small time-dependent MLP dynamics over a vector state, pytree params."""
+    def f(params, z, t):
+        h = jnp.tanh(z @ params["w1"] + params["b1"] + t * params["bt"])
+        return h @ params["w2"] + params["b2"]
+    return f
+
+
+def mlp_params(key, d, width=8):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": 0.5 * jax.random.normal(k1, (d, width)),
+        "b1": jnp.zeros((width,)),
+        "bt": 0.3 * jnp.ones((width,)),
+        "w2": 0.5 * jax.random.normal(k2, (width, d)),
+        "b2": 0.1 * jax.random.normal(k3, (d,)),
+    }

@@ -1,0 +1,167 @@
+"""ALF solver unit tests: invertibility (the paper's key property), local/
+global truncation order (Thm 3.1 / A.3), damping (Thm 3.2), stability."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import linear_dynamics, mlp_dynamics, mlp_params
+from repro.core.alf import (alf_inverse, alf_step, alf_step_with_error,
+                            check_eta, init_velocity)
+
+
+def _decay(params, z, t):
+    return params * z
+
+
+@pytest.mark.parametrize("eta", [1.0, 0.9, 0.7, 0.25])
+def test_alf_inverse_roundtrip_scalar(eta):
+    params = jnp.float32(-0.7)
+    z = jnp.float32(1.3)
+    v = _decay(params, z, 0.0)
+    h = jnp.float32(0.37)
+    z1, v1 = alf_step(_decay, params, z, v, jnp.float32(0.0), h, eta)
+    z0, v0 = alf_inverse(_decay, params, z1, v1, h, h, eta)
+    np.testing.assert_allclose(z0, z, rtol=1e-6)
+    np.testing.assert_allclose(v0, v, rtol=1e-6)
+
+
+@pytest.mark.parametrize("eta", [1.0, 0.8])
+def test_alf_inverse_roundtrip_pytree(eta):
+    key = jax.random.PRNGKey(1)
+    d = 6
+    params = mlp_params(key, d)
+    f = mlp_dynamics()
+    z = {"a": jax.random.normal(jax.random.PRNGKey(2), (d,)),
+         "b": jax.random.normal(jax.random.PRNGKey(3), (d,))}
+
+    def f_tree(p, zt, t):
+        return {"a": f(p, zt["a"], t), "b": -f(p, zt["b"], t)}
+
+    v = init_velocity(f_tree, params, z, jnp.float32(0.0))
+    h = jnp.float32(0.21)
+    z1, v1 = alf_step(f_tree, params, z, v, jnp.float32(0.0), h, eta)
+    z0, v0 = alf_inverse(f_tree, params, z1, v1, h, h, eta)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(z0[k], z[k], atol=1e-6)
+        np.testing.assert_allclose(v0[k], v[k], atol=1e-6)
+
+
+def test_trajectory_reconstruction_matches_forward():
+    """Paper Fig. 3 / Eq. 5: whole trajectory recoverable from end state."""
+    params = jnp.float32(0.5)
+    z = jnp.float32(1.0)
+    t0, n, h = jnp.float32(0.0), 16, jnp.float32(1.0 / 16)
+    v = _decay(params, z, t0)
+    fwd = [(z, v)]
+    t = t0
+    for _ in range(n):
+        z, v = alf_step(_decay, params, z, v, t, h)
+        t = t + h
+        fwd.append((z, v))
+    # reconstruct backward from the end state only
+    for i in range(n, 0, -1):
+        t_out = t0 + i * h
+        z, v = alf_inverse(_decay, params, z, v, t_out, h)
+        np.testing.assert_allclose(z, fwd[i - 1][0], rtol=2e-5)
+        np.testing.assert_allclose(v, fwd[i - 1][1], rtol=2e-5)
+
+
+def _one_step_z_error(h):
+    """|z_1 - z(h)| for dz/dt = alpha z with exact v0 (float64 via numpy)."""
+    alpha, z0 = -0.9, 1.7
+    s1 = h / 2
+    k1 = z0 + alpha * z0 * h / 2
+    u1 = alpha * k1
+    v1 = 2 * u1 - alpha * z0
+    z1 = k1 + v1 * h / 2
+    return abs(z1 - z0 * math.exp(alpha * h))
+
+
+def test_local_truncation_order_thm31():
+    """Thm 3.1: local z error O(h^3) => halving h cuts error ~8x."""
+    e1 = _one_step_z_error(0.1)
+    e2 = _one_step_z_error(0.05)
+    ratio = e1 / e2
+    assert 6.5 < ratio < 9.5, ratio
+
+
+def test_global_order_two():
+    """Global error O(h^2): doubling steps cuts end-state error ~4x."""
+    alpha, z0, T = -0.9, 1.7, 1.0
+    errs = []
+    for n in (16, 32, 64):
+        z, v = z0, alpha * z0
+        h = T / n
+        t = 0.0
+        for _ in range(n):
+            z, v = (float(x) for x in alf_step(
+                _decay, jnp.float64(alpha) if False else jnp.float32(alpha),
+                jnp.float32(z), jnp.float32(v), jnp.float32(t),
+                jnp.float32(h)))
+            t += h
+        errs.append(abs(z - z0 * math.exp(alpha * T)))
+    assert 3.0 < errs[0] / errs[1] < 5.0, errs
+    assert 2.5 < errs[1] / errs[2] < 5.5, errs
+
+
+def test_embedded_error_estimate_tracks_truncation():
+    """alf_step_with_error: err ~ h*(u1 - v) shrinks ~4x when h halves
+    (second-difference of a smooth trajectory)."""
+    params = jnp.float32(-0.9)
+    z = jnp.float32(1.7)
+    # v deliberately offset from f(z) so (u1 - v) != 0
+    v = _decay(params, z, 0.0) * 1.01
+
+    def err_of(h):
+        _, _, e = alf_step_with_error(_decay, params, z, v, jnp.float32(0.0),
+                                      jnp.float32(h))
+        return abs(float(e))
+
+    assert err_of(0.2) > err_of(0.1) > 0.0
+
+
+def test_check_eta():
+    check_eta(1.0)
+    check_eta(0.75)
+    for bad in (0.0, -0.1, 1.5, 0.5):
+        with pytest.raises(ValueError):
+            check_eta(bad)
+
+
+def test_plain_alf_not_a_stable_real_axis():
+    """Thm A.2: for real negative h*sigma the undamped ALF amplifies —
+    |lambda_-| = |hs - sqrt(h^2 s^2 + 1)| > 1 for hs < 0."""
+    params = jnp.float32(-4.0)   # stiff-ish
+    h = jnp.float32(0.5)         # hs = -2
+    z, v = jnp.float32(1.0), _decay(jnp.float32(-4.0), jnp.float32(1.0), 0.0)
+    t = jnp.float32(0.0)
+    amps = []
+    for _ in range(40):
+        z, v = alf_step(_decay, params, z, v, t, h)
+        t = t + h
+        amps.append(float(jnp.sqrt(z * z + v * v)))
+    assert amps[-1] > amps[0] * 10  # grows (true solution decays)
+
+
+def test_damped_alf_stabilizes():
+    """Thm 3.2: with eta<1 there is a non-empty stability region; the same
+    stiff problem stays bounded under damping."""
+    params = jnp.float32(-4.0)
+    h = jnp.float32(0.25)        # hs = -1
+    eta = 0.25
+    # check the theorem's eigenvalue condition first (complex sqrt: the
+    # discriminant is negative here — conjugate eigenvalue pair)
+    import cmath
+    hs = float(h) * -4.0
+    disc = cmath.sqrt(eta * (2 * hs + eta * (hs - 1) ** 2))
+    lam = [1 + eta * (hs - 1) + s * disc for s in (+1, -1)]
+    assert all(abs(l) < 1 for l in lam), lam
+    z, v = jnp.float32(1.0), _decay(params, jnp.float32(1.0), 0.0)
+    t = jnp.float32(0.0)
+    for _ in range(200):
+        z, v = alf_step(_decay, params, z, v, t, h, eta)
+        t = t + h
+    assert abs(float(z)) < 1.0  # decays toward 0, no blow-up

@@ -1,0 +1,122 @@
+"""Distribution integration: the multi-pod dry-run as a subprocess (so the
+512-fake-device XLA flag never leaks into this process), plus HLO-derived
+roofline sanity."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+@pytest.mark.slow
+def test_dryrun_single_and_multi_pod(tmp_path):
+    """One representative cell must lower+compile on the 16x16 pod AND the
+    2x16x16 multi-pod mesh (proves the 'pod' axis shards)."""
+    out = str(tmp_path)
+    r = _run_dryrun(["--arch", "qwen3-1.7b", "--shape", "train_4k",
+                     "--mesh", "both", "--out", out])
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    recs = [json.loads(l) for l in
+            open(os.path.join(out, "summary.jsonl"))]
+    assert len(recs) == 2
+    for rec in recs:
+        assert rec["status"] == "ok", rec
+        roof = rec["roofline"]
+        assert roof["flops"] > 0
+        assert roof["hbm_bytes"] > 0
+        assert rec["chips"] in (256, 512)
+    multi = [r for r in recs if r["mesh"] == "pod2x16x16"]
+    assert len(multi) == 1
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    """long_500k must be skipped for full-attention archs, run for SSM."""
+    out = str(tmp_path)
+    r = _run_dryrun(["--arch", "qwen3-1.7b", "--shape", "long_500k",
+                     "--mesh", "single", "--out", out])
+    assert r.returncode == 0
+    rec = json.loads(open(os.path.join(out, "summary.jsonl")).readline())
+    assert rec["status"] == "skipped"
+    assert "sub-quadratic" in rec["reason"]
+
+
+def test_roofline_math():
+    """Unit check of the three-term model with synthetic inputs: per-chip
+    197 TFLOPs of compute / 819 GB of HBM traffic / 50 GB on the wire each
+    take exactly 1 second at v5e peaks."""
+    from repro.launch.roofline import CollectiveStats, Roofline
+    rep = Roofline(flops=197e12, hbm_bytes=819e9,
+                   coll=CollectiveStats(wire_bytes_per_chip=50e9),
+                   chips=256, model_flops=197e12 * 256)
+    d = rep.to_dict()
+    assert abs(d["t_compute_s"] - 1.0) < 1e-6
+    assert abs(d["t_memory_s"] - 1.0) < 1e-6
+    assert abs(d["t_collective_s"] - 1.0) < 1e-6
+    assert d["useful_flops_ratio"] == pytest.approx(1.0)
+
+
+def test_hlo_collective_parser():
+    """collective wire-byte parsing from HLO text, incl. the ring-algorithm
+    multipliers (AR 2(n-1)/n; AG (n-1)/n)."""
+    from repro.launch.roofline import collective_stats
+    hlo = """
+HloModule m
+
+ENTRY %e (p: f32[1024,256]) -> (f32[1024,512]) {
+  %p = f32[1024,256]{1,0} parameter(0)
+  %ag = f32[1024,512]{1,0} all-gather(%p), dimensions={1}, replica_groups={{0,1}}
+  %ar = f32[1024,512]{1,0} all-reduce(%ag), to_apply=%add, replica_groups={{0,1}}
+  ROOT %t = (f32[1024,512]{1,0}) tuple(%ar)
+}
+"""
+    stats = collective_stats(hlo, default_group=2)
+    assert stats.op_counts.get("all-gather") == 1
+    assert stats.op_counts.get("all-reduce") == 1
+    ag_bytes = 1024 * 512 * 4
+    assert stats.op_bytes["all-gather"] == pytest.approx(ag_bytes * 0.5)
+    assert stats.op_bytes["all-reduce"] == pytest.approx(ag_bytes * 1.0)
+
+
+def test_loop_trip_multiplication():
+    """Collectives inside a while body (scan-over-layers) must be counted
+    trip-count times."""
+    from repro.launch.roofline import collective_stats
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64] get-tuple-element(%p), index=1
+  %ar = f32[64,64] all-reduce(%x), to_apply=%add, replica_groups={{0,1}}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %r = (s32[], f32[64,64]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %e (p0: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p0 = (s32[], f32[64,64]) parameter(0)
+  ROOT %w = (s32[], f32[64,64]) while(%p0), condition=%cond, body=%body
+}
+"""
+    stats = collective_stats(hlo, default_group=2)
+    assert stats.op_counts.get("all-reduce") == 12

@@ -1,0 +1,214 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp ref.py oracle for every kernel in src/repro/kernels/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.alf_step import ops as alf_ops
+from repro.kernels.alf_step import ref as alf_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ops as rn_ops
+from repro.kernels.rmsnorm import ref as rn_ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# alf_step: fused elementwise ALF state updates (pytree-generic)
+# ---------------------------------------------------------------------------
+
+ALF_STATES = [
+    {"z": (128,)},
+    {"z": (3, 200)},                      # non-lane-aligned => pad path
+    {"z": (2, 64, 64), "w": (257,)},      # multi-leaf pytree
+]
+
+
+@pytest.mark.parametrize("shapes", ALF_STATES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("eta", [1.0, 0.8])
+def test_alf_kernels_vs_ref(shapes, dtype, eta):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3 * len(shapes))
+    mk = lambda i: {k: _rand(keys[i * len(shapes) + j], s, dtype)
+                    for j, (k, s) in enumerate(shapes.items())}
+    z, v, u = mk(0), mk(1), mk(2)
+    h = jnp.float32(0.23)
+
+    for sign in (1.0, -1.0):
+        got = alf_ops.alf_midpoint(z, v, h, sign=sign, use_pallas=True)
+        want = alf_ops.alf_midpoint(z, v, h, sign=sign, use_pallas=False)
+        for g, w in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       **_tol(dtype))
+
+    zo_p, vo_p = alf_ops.alf_update(z, v, u, h, eta=eta, use_pallas=True)
+    zo_r, vo_r = alf_ops.alf_update(z, v, u, h, eta=eta, use_pallas=False)
+    for g, w in zip(jax.tree_util.tree_leaves((zo_p, vo_p)),
+                    jax.tree_util.tree_leaves((zo_r, vo_r))):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **_tol(dtype))
+
+    zi_p, vi_p = alf_ops.alf_inverse_update(z, vo_p, u, h, eta=eta,
+                                            use_pallas=True)
+    zi_r, vi_r = alf_ops.alf_inverse_update(z, vo_r, u, h, eta=eta,
+                                            use_pallas=False)
+    for g, w in zip(jax.tree_util.tree_leaves((zi_p, vi_p)),
+                    jax.tree_util.tree_leaves((zi_r, vi_r))):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **_tol(dtype))
+
+
+def test_alf_kernel_update_inverse_roundtrip():
+    """Pallas update followed by Pallas inverse recovers v exactly."""
+    z = {"s": jnp.linspace(-1, 1, 384, dtype=jnp.float32)}
+    v = {"s": jnp.cos(jnp.linspace(0, 3, 384, dtype=jnp.float32))}
+    u = {"s": jnp.sin(jnp.linspace(0, 5, 384, dtype=jnp.float32))}
+    h = jnp.float32(0.11)
+    zo, vo = alf_ops.alf_update(z, v, u, h, use_pallas=True)
+    # inverse tail consumes (k1=z, v_out, u1) and must return v_in = v
+    _, vi = alf_ops.alf_inverse_update(z, vo, u, h, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(vi["s"]), np.asarray(v["s"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, Sq, Sk, H, KV, d, causal, window, softcap)
+    (1, 128, 128, 4, 4, 64, True, 0, 0.0),      # MHA causal
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0),      # GQA 2:1
+    (1, 256, 256, 8, 1, 64, True, 0, 0.0),      # MQA (granite kv=1)
+    (1, 128, 128, 4, 4, 64, False, 0, 0.0),     # bidirectional
+    (1, 256, 256, 4, 2, 64, True, 128, 0.0),    # sliding window (gemma2)
+    (1, 128, 128, 4, 2, 64, True, 0, 50.0),     # softcap (gemma2)
+    (2, 384, 384, 4, 2, 128, True, 256, 30.0),  # window+softcap, d=128
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_vs_ref(case, dtype):
+    b, sq, sk, h, kv, d, causal, window, softcap = case
+    kq, kk, kvk = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(kq, (b, sq, h, d), dtype)
+    k = _rand(kk, (b, sk, kv, d), dtype)
+    v = _rand(kvk, (b, sk, kv, d), dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, use_pallas=True,
+                                 interpret=True)
+    want = fa_ref.attention_ref(q, k, v, causal=causal, window=window,
+                                softcap=softcap)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_flash_attention_rows_sum_to_one_property():
+    """Causal row 0 attends only to itself => output == v[0]."""
+    b, s, h, d = 1, 64, 2, 32
+    q = _rand(jax.random.PRNGKey(0), (b, s, h, d), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (b, s, h, d), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (b, s, h, d), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+RN_SHAPES = [(4, 128), (2, 7, 256), (1, 384), (3, 5, 64)]
+
+
+@pytest.mark.parametrize("shape", RN_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rmsnorm_vs_ref(shape, dtype):
+    x = _rand(jax.random.PRNGKey(3), shape, dtype)
+    scale = 1.0 + 0.1 * _rand(jax.random.PRNGKey(4), shape[-1:], jnp.float32)
+    got = rn_ops.rmsnorm(x, scale, use_pallas=True)
+    want = rn_ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_rmsnorm_unit_output_norm():
+    """RMS of output/scale must be ~1 per row."""
+    x = 5.0 * _rand(jax.random.PRNGKey(5), (16, 128), jnp.float32)
+    out = rn_ops.rmsnorm(x, jnp.ones((128,)), use_pallas=True)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan: fused selective scan
+# ---------------------------------------------------------------------------
+
+from repro.kernels.mamba_scan import ops as ms_ops
+from repro.kernels.mamba_scan import ref as ms_ref
+
+MS_CASES = [
+    # (Bt, S, DI, ST)
+    (1, 16, 128, 16),
+    (2, 33, 256, 16),     # odd seq
+    (1, 8, 200, 8),       # DI padding path
+    (2, 64, 512, 4),
+]
+
+
+@pytest.mark.parametrize("case", MS_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_mamba_scan_vs_ref(case, dtype):
+    bt, s, di, st = case
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    delta = jax.nn.softplus(_rand(ks[0], (bt, s, di), dtype))
+    u = _rand(ks[1], (bt, s, di), dtype)
+    A = -jnp.exp(0.3 * jax.random.normal(ks[2], (di, st)))
+    B = _rand(ks[3], (bt, s, st), dtype)
+    C = _rand(ks[4], (bt, s, st), dtype)
+    y_p, h_p = ms_ops.selective_scan(delta, u, A, B, C, use_pallas=True,
+                                     interpret=True)
+    y_r, h_r = ms_ref.selective_scan_ref(delta, u, A, B, C)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), **tol)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r), **tol)
+
+
+def test_mamba_scan_carries_initial_state():
+    bt, s, di, st = 1, 12, 128, 8
+    ks = jax.random.split(jax.random.PRNGKey(12), 6)
+    delta = jax.nn.softplus(jax.random.normal(ks[0], (bt, s, di)))
+    u = jax.random.normal(ks[1], (bt, s, di))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[2], (di, st)))
+    B = jax.random.normal(ks[3], (bt, s, st))
+    C = jax.random.normal(ks[4], (bt, s, st))
+    h0 = jax.random.normal(ks[5], (bt, di, st))
+    # split scan == full scan (chunked-prefill invariant)
+    y_full, h_full = ms_ops.selective_scan(delta, u, A, B, C, h0,
+                                           use_pallas=True)
+    y1, h1 = ms_ops.selective_scan(delta[:, :6], u[:, :6], A, B[:, :6],
+                                   C[:, :6], h0, use_pallas=True)
+    y2, h2 = ms_ops.selective_scan(delta[:, 6:], u[:, 6:], A, B[:, 6:],
+                                   C[:, 6:], h1, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alf import alf_inverse, alf_step
+from repro.core.integrate import fixed_grid_times
+from repro.models.lm import chunked_ce_loss
+from repro.optim.compression import (compress_grads, dequantize_int8,
+                                     EFState, quantize_int8)
+from repro.optim.optimizer import clip_by_global_norm, global_norm
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def _state_and_step(draw):
+    n = draw(st.integers(2, 32))
+    seed = draw(st.integers(0, 2 ** 16))
+    h = draw(st.floats(0.01, 0.8))
+    eta = draw(st.sampled_from([1.0, 0.9, 0.75, 0.3]))
+    return n, seed, h, eta
+
+
+@given(_state_and_step())
+@settings(**_SETTINGS)
+def test_alf_step_bijective(args):
+    """psi_h is a bijection: inverse(step(x)) == x for any state, any h,
+    any valid eta, any (deterministic) dynamics."""
+    n, seed, h, eta = args
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(0.5 * rng.standard_normal((n, n)), jnp.float32)
+
+    def f(params, z, t):
+        return jnp.tanh(params @ z) + 0.1 * t * z
+
+    z = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    v = f(A, z, jnp.float32(0.0))
+    h = jnp.float32(h)
+    z1, v1 = alf_step(f, A, z, v, jnp.float32(0.0), h, eta)
+    z0, v0 = alf_inverse(f, A, z1, v1, h, h, eta)
+    np.testing.assert_allclose(np.asarray(z0), np.asarray(z),
+                               rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v),
+                               rtol=5e-4, atol=5e-5)
+
+
+@given(st.floats(-10, 10), st.floats(0.05, 2.0), st.integers(1, 64))
+@settings(**_SETTINGS)
+def test_fixed_grid_covers_interval(t0, span, n):
+    ts, h = fixed_grid_times(jnp.float32(t0), jnp.float32(t0 + span), n)
+    assert ts.shape == (n,)
+    np.testing.assert_allclose(float(ts[0]), t0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(ts[-1] + h), t0 + span,
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 4096))
+@settings(**_SETTINGS)
+def test_int8_quantization_error_bound(seed, n):
+    """|x - deq(q(x))| <= scale/2 elementwise (round-to-nearest)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * 10 ** rng.uniform(-3, 3),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(**_SETTINGS)
+def test_error_feedback_identity(seed):
+    """EF invariant: deq + new_error == grads + old_error exactly."""
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal(64), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)}
+    ef = EFState({"a": jnp.asarray(rng.standard_normal(64) * 0.1,
+                                   jnp.float32),
+                  "b": jnp.zeros((4, 8), jnp.float32)})
+    deq, ef2 = compress_grads(g, ef)
+    for k in g:
+        lhs = np.asarray(deq[k]) + np.asarray(ef2.error[k])
+        rhs = np.asarray(g[k]) + np.asarray(ef.error[k])
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 10.0))
+@settings(**_SETTINGS)
+def test_clip_by_global_norm_properties(seed, max_norm):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal(32) * 5, jnp.float32)}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    out_norm = float(global_norm(clipped))
+    assert out_norm <= max_norm * (1 + 1e-4)
+    if float(norm) <= max_norm:  # no-op case: unchanged
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"]), rtol=1e-6)
+    else:  # direction preserved
+        cos = np.dot(np.asarray(clipped["a"]), np.asarray(g["a"])) / (
+            out_norm * float(norm))
+        np.testing.assert_allclose(cos, 1.0, rtol=1e-4)
+
+
+@given(st.integers(1, 4), st.integers(2, 40), st.integers(3, 50),
+       st.integers(0, 2 ** 16))
+@settings(**_SETTINGS)
+def test_chunked_ce_matches_dense_ce(b, s, vocab, seed):
+    """The chunked-scan CE (never materializes [B,S,V]) must equal the dense
+    softmax cross-entropy for any shape, including non-divisible chunks."""
+    from repro.configs import smoke_config
+    cfg = smoke_config("qwen3-1.7b")
+    rng = np.random.default_rng(seed)
+    d = 16
+    h = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((d, vocab)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32)
+    got = chunked_ce_loss(h, head, labels, cfg, chunk=7)
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 8))
+@settings(**_SETTINGS)
+def test_data_pipeline_determinism_and_disjointness(seed, n_shards):
+    """Any host can regenerate any shard of any step (elasticity invariant);
+    shards of the same step are pairwise different."""
+    from repro.configs import smoke_config
+    from repro.data.synthetic import DataConfig, make_batch
+    cfg = smoke_config("qwen3-1.7b")
+    dcfg = DataConfig(seed=seed, global_batch=8 * n_shards, seq_len=16)
+    a = make_batch(cfg, dcfg, step=3, shard=0, n_shards=n_shards)
+    b = make_batch(cfg, dcfg, step=3, shard=0, n_shards=n_shards)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if n_shards > 1:
+        c = make_batch(cfg, dcfg, step=3, shard=1, n_shards=n_shards)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+    d = make_batch(cfg, dcfg, step=4, shard=0, n_shards=n_shards)
+    assert not np.array_equal(a["tokens"], d["tokens"])
+    # labels are the next-token shift of the same stream
+    full = make_batch(cfg, dcfg, step=3, shard=0, n_shards=n_shards)
+    np.testing.assert_array_equal(full["tokens"][:, 1:],
+                                  full["labels"][:, :-1])

@@ -1,0 +1,229 @@
+"""Substrate tests: optimizer math, checkpointing, fault-tolerance policy,
+sharding rules (on a trivial 1-device mesh — full-mesh coverage is the
+dry-run's job, exercised as a subprocess in test_distributed.py)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, list_checkpoints,
+                                         prune_checkpoints,
+                                         restore_checkpoint, restore_latest,
+                                         save_checkpoint)
+from repro.distributed.fault_tolerance import (plan_elastic_mesh,
+                                               reassign_shards,
+                                               run_with_recovery)
+from repro.optim.optimizer import (OptimizerConfig, apply_updates,
+                                   init_opt_state, lr_schedule)
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(lr_schedule(cfg, jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(lr_schedule(cfg, jnp.int32(10))), 1e-3,
+                               rtol=1e-5)
+    end = float(lr_schedule(cfg, jnp.int32(100)))
+    np.testing.assert_allclose(end, 1e-4, rtol=1e-4)  # min_lr_ratio * peak
+    mid = float(lr_schedule(cfg, jnp.int32(55)))
+    assert 1e-4 < mid < 1e-3
+
+
+def test_adamw_first_step_matches_reference():
+    """One AdamW step vs hand-computed update (f32 master path)."""
+    cfg = OptimizerConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10,
+                          min_lr_ratio=1.0, b1=0.9, b2=0.95, eps=1e-8,
+                          weight_decay=0.0, clip_norm=0.0,
+                          momentum_dtype="float32")
+    p = {"w": jnp.asarray([1.0, -2.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.5, 0.25], jnp.float32)}
+    st = init_opt_state(cfg, p)
+    p2, st2, metrics = apply_updates(cfg, p, g, st)
+    m = 0.1 * np.asarray(g["w"])            # (1-b1)*g
+    v = 0.05 * np.asarray(g["w"]) ** 2      # (1-b2)*g^2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    want = np.asarray(p["w"]) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"], np.float32), want,
+                               rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_sgd_momentum_and_weight_decay():
+    cfg = OptimizerConfig(name="sgd", peak_lr=0.1, warmup_steps=0,
+                          total_steps=10, min_lr_ratio=1.0, momentum=0.9,
+                          weight_decay=0.0, clip_norm=0.0,
+                          momentum_dtype="float32")
+    p = {"w": jnp.asarray([1.0], jnp.float32)}
+    g = {"w": jnp.asarray([1.0], jnp.float32)}
+    st = init_opt_state(cfg, p)
+    p1, st, _ = apply_updates(cfg, p, g, st)
+    p2, st, _ = apply_updates(cfg, p1, g, st)
+    # m1 = 1.0 ; m2 = 0.9*1 + 1 = 1.9
+    np.testing.assert_allclose(float(p1["w"][0]), 1.0 - 0.1, rtol=1e-5)
+    np.testing.assert_allclose(float(p2["w"][0]), 0.9 - 0.19, rtol=1e-4)
+
+
+def test_grad_clip_inside_apply_updates():
+    cfg = OptimizerConfig(clip_norm=1.0, warmup_steps=0)
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": 100.0 * jnp.ones((4,), jnp.float32)}
+    st = init_opt_state(cfg, p)
+    _, _, metrics = apply_updates(cfg, p, g, st)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "opt": (jnp.int32(7), jnp.zeros((2,), jnp.float32))}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_checkpoint(d, 100, tree, metadata={"loss": 1.25})
+    got, meta = restore_checkpoint(os.path.join(d, "step_00000100"), tree)
+    assert meta["loss"] == 1.25
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_restore_latest_and_prune(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(d, s, tree)
+    steps = [s for s, _ in list_checkpoints(d)]
+    assert steps == [10, 20, 30, 40]
+    step, got, _ = restore_latest(d, tree)
+    assert step == 40
+    prune_checkpoints(d, keep=2)
+    assert [s for s, _ in list_checkpoints(d)] == [30, 40]
+
+
+def test_restore_latest_empty(tmp_path):
+    assert restore_latest(str(tmp_path), _tree()) is None
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3):
+        ck.save(s, tree, metadata={"step": s})
+    ck.wait()
+    steps = [s for s, _ in list_checkpoints(d)]
+    assert steps == [2, 3]  # keep=2
+    step, got, meta = restore_latest(d, tree)
+    assert step == 3 and meta["step"] == 3
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / elasticity
+# ---------------------------------------------------------------------------
+
+
+def test_plan_elastic_mesh_shrinks_data_axis():
+    plan = plan_elastic_mesh(n_available=512, model_size=16,
+                             global_batch=256, pods=2)
+    assert plan.model == 16 and plan.pod == 2
+    assert plan.n_devices <= 512
+    assert 256 % plan.data == 0
+    # lose 3 nodes x 8 chips
+    plan2 = plan_elastic_mesh(n_available=512 - 24, model_size=16,
+                              global_batch=256, pods=2)
+    assert plan2.data <= plan.data
+    assert 256 % plan2.data == 0
+
+
+def test_plan_elastic_mesh_raises_when_model_cannot_fit():
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(n_available=8, model_size=16, global_batch=64)
+
+
+def test_reassign_shards_covers_all():
+    m = reassign_shards([0, 2, 5], n_shards=8)
+    got = sorted(s for ss in m.values() for s in ss)
+    assert got == list(range(8))
+    # deterministic
+    assert m == reassign_shards([5, 0, 2], n_shards=8)
+
+
+def test_run_with_recovery_restores_and_finishes(tmp_path):
+    """Simulated preemption: loop crashes twice, resumes from checkpointed
+    step, completes."""
+    state = {"ckpt": None, "crashes": 0}
+
+    def restore_step():
+        return state["ckpt"]
+
+    def train_loop(resume):
+        step = resume or 0
+        for s in range(step, 10):
+            state["ckpt"] = s
+            if s == 4 and state["crashes"] < 2:
+                state["crashes"] += 1
+                raise RuntimeError("simulated node loss")
+        return 10
+
+    final, stats = run_with_recovery(train_loop, restore_step,
+                                     max_failures=3)
+    assert final == 10
+    assert stats.failures == 2
+    assert stats.restores >= 2
+
+
+def test_run_with_recovery_gives_up():
+    def train_loop(resume):
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        run_with_recovery(train_loop, lambda: None, max_failures=2)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (1-device mesh: spec logic only)
+# ---------------------------------------------------------------------------
+
+
+def test_param_shardings_cover_tree():
+    from repro.configs import get_config
+    from repro.distributed.sharding import param_shardings
+    from repro.launch.specs import param_specs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("qwen3-1.7b", "deepseek-moe-16b", "jamba-v0.1-52b"):
+        cfg = get_config(arch)
+        like = param_specs(cfg)
+        sh = param_shardings(cfg, mesh, like)
+        # same structure, every leaf a NamedSharding
+        jax.tree_util.tree_map(
+            lambda l, s: s.shard_shape(l.shape), like, sh)
+
+
+def test_batch_shardings_batch_axis():
+    from repro.configs import get_config
+    from repro.distributed.sharding import batch_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("qwen3-1.7b")
+    like = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    sh = batch_shardings(cfg, mesh, like)
+    assert isinstance(sh["tokens"], jax.sharding.NamedSharding)
+    # on a trivial 1-device mesh every axis has size 1 => fully replicated
+    # is valid; the multi-device batch-axis placement is covered by the
+    # dry-run subprocess test (spec logic exercised there at 512 devices).
+    assert sh["tokens"].shard_shape((8, 16)) == (8, 16)
