@@ -16,7 +16,7 @@ import time
 from .common import print_rows
 
 BENCHES = ("toy_gradient_error", "memory_cost", "solver_invariance",
-           "speed", "damped", "adversarial")
+           "speed", "damped", "adversarial", "observation_grid")
 
 
 def _dryrun_summary_rows():

@@ -3,6 +3,8 @@ from .alf import (alf_inverse, alf_step, alf_step_with_error, init_velocity,
                   tree_add, tree_scale, tree_sub, tree_zeros_like)
 from .api import (METHODS, mali_forward_stats, odeint, odeint_aca,
                   odeint_adjoint, odeint_mali, odeint_naive)
+from .integrate import (as_time_grid, integrate_adaptive_grid,
+                        integrate_fixed_grid)
 from .ode_block import OdeSettings, ode_block
 from .solvers import SOLVERS, get_solver
 
@@ -11,5 +13,6 @@ __all__ = [
     "odeint", "odeint_mali", "odeint_naive", "odeint_aca", "odeint_adjoint",
     "mali_forward_stats", "METHODS", "SOLVERS", "get_solver",
     "OdeSettings", "ode_block",
+    "as_time_grid", "integrate_fixed_grid", "integrate_adaptive_grid",
     "tree_add", "tree_sub", "tree_scale", "tree_zeros_like",
 ]

@@ -5,6 +5,12 @@ N_z(N_f + N_t)) plus the accepted (t_i, h_i); backward re-plays each accepted
 step under a local VJP, excluding the stepsize search from the graph
 (depth N_f * N_t). This is the paper's strongest accuracy baseline and the
 method MALI matches in gradient quality while dropping the O(N_t) term.
+
+Like MALI, ACA is built around an observation grid ``ts``: a single scan
+whose carry crosses segment boundaries, checkpointing per-segment step start
+states and emitting z at every requested ``ts[k]``. The backward sweep walks
+the segments in reverse, injecting the trajectory cotangent g[k] at each
+observation. The scalar path is the length-1 grid [t0, t1].
 """
 from __future__ import annotations
 
@@ -16,8 +22,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from .alf import tree_add, tree_zeros_like
-from .integrate import (fixed_grid_times, integrate_adaptive,
-                        reverse_masked_scan)
+from .integrate import (as_time_grid, fixed_grid_times,
+                        integrate_adaptive_grid, prepend_row,
+                        reverse_masked_scan, reverse_segment_sweep,
+                        scalar_time_grid, segment_pairs)
 from .solvers import ButcherTableau, get_solver
 from .stepsize import error_ratio
 
@@ -37,43 +45,50 @@ class AcaConfig(NamedTuple):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _aca(cfg: AcaConfig, params: Pytree, z0: Pytree,
-         t0: jax.Array, t1: jax.Array) -> Pytree:
-    zT, _ = _aca_fwd(cfg, params, z0, t0, t1)
-    return zT
+def _aca_grid(cfg: AcaConfig, params: Pytree, z0: Pytree,
+              ts: jax.Array) -> Pytree:
+    z_traj, _ = _aca_grid_fwd(cfg, params, z0, ts)
+    return z_traj
 
 
-def _aca_fwd(cfg, params, z0, t0, t1):
+def _aca_grid_fwd(cfg, params, z0, ts):
     sol = cfg.solver
+
     if cfg.n_steps > 0:
-        ts, h = fixed_grid_times(t0, t1, cfg.n_steps)
+        def seg(z, pair):
+            step_ts, h = fixed_grid_times(pair[0], pair[1], cfg.n_steps)
 
-        def body(z, t):
-            z1, _ = sol.step(cfg.f, params, z, t, h)
-            return z1, z  # checkpoint the step's start state
+            def body(zz, t):
+                z1, _ = sol.step(cfg.f, params, zz, t, h)
+                return z1, zz  # checkpoint the step's start state
 
-        zT, traj = lax.scan(body, z0, ts)
-        hs = jnp.full((cfg.n_steps,), h)
-        n_acc = jnp.asarray(cfg.n_steps, jnp.int32)
-        return zT, (params, traj, ts, hs, n_acc, t0, t1)
+            z_end, ckpts = lax.scan(body, z, step_ts)
+            hs = jnp.full((cfg.n_steps,), h, step_ts.dtype)
+            return z_end, (z_end, step_ts, hs,
+                           jnp.asarray(cfg.n_steps, jnp.int32), ckpts)
+
+        zT, (tail, seg_ts, seg_hs, seg_acc, seg_ckpts) = lax.scan(
+            seg, z0, segment_pairs(ts))
+        return prepend_row(z0, tail), (params, seg_ts, seg_hs, seg_acc,
+                                       seg_ckpts, ts)
 
     def trial(z, t, h):
         z1, err = sol.step(cfg.f, params, z, t, h)
         return z1, error_ratio(err, z, z1, cfg.rtol, cfg.atol)
 
-    out = integrate_adaptive(trial, z0, t0, t1, order=sol.order,
-                             rtol=cfg.rtol, atol=cfg.atol,
-                             max_steps=cfg.max_steps, record_states=True)
-    return out.state, (params, out.state_traj, out.ts, out.hs,
-                       out.n_accepted, t0, t1)
+    out = integrate_adaptive_grid(trial, z0, ts, order=sol.order,
+                                  rtol=cfg.rtol, atol=cfg.atol,
+                                  max_steps=cfg.max_steps, record_states=True)
+    return out.traj, (params, out.ts, out.hs, out.n_accepted,
+                      out.state_traj, ts)
 
 
-def _aca_bwd(cfg, res, g_zT):
-    params, traj, ts, hs, n_acc, t0, t1 = res
+def _aca_grid_bwd(cfg, res, g):
+    params, seg_ts, seg_hs, seg_acc, seg_ckpts, ts = res
     sol = cfg.solver
     max_steps = cfg.n_steps if cfg.n_steps > 0 else cfg.max_steps
 
-    def body(carry, t, h, z_i):
+    def step_body(carry, t, h, z_i):
         a_z, g_p = carry
 
         def step_fn(p, z):
@@ -84,18 +99,26 @@ def _aca_bwd(cfg, res, g_zT):
         dp, dz = vjp_fn(a_z)
         return (dz, tree_add(g_p, dp))
 
-    carry0 = (g_zT, tree_zeros_like(params))
-    a_z, g_params = reverse_masked_scan(body, carry0, ts, hs, n_acc,
-                                        max_steps, extras=traj)
-    zero_t = jnp.zeros_like(jnp.asarray(t0))
-    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+    def seg(carry, g_k1, xs_k):
+        a_z, g_p = carry
+        ts_k, hs_k, n_k, ckpts_k = xs_k
+        a_z = tree_add(a_z, g_k1)
+        a_z, g_p = reverse_masked_scan(step_body, (a_z, g_p), ts_k, hs_k,
+                                       n_k, max_steps, extras=ckpts_k)
+        return (a_z, g_p)
+
+    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g)),
+              tree_zeros_like(params))
+    a_z, g_params = reverse_segment_sweep(
+        seg, carry0, g, (seg_ts, seg_hs, seg_acc, seg_ckpts))
+    return g_params, a_z, jnp.zeros_like(ts)
 
 
-_aca.defvjp(_aca_fwd, _aca_bwd)
+_aca_grid.defvjp(_aca_grid_fwd, _aca_grid_bwd)
 
 
 def odeint_aca(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-               solver: str = "heun_euler", n_steps: int = 0,
+               ts=None, solver: str = "heun_euler", n_steps: int = 0,
                rtol: float = 1e-2, atol: float = 1e-3,
                max_steps: int = 64) -> Pytree:
     sol = get_solver(solver)
@@ -105,5 +128,7 @@ def odeint_aca(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
         raise ValueError(f"solver {solver!r} has no embedded error estimate")
     cfg = AcaConfig(f, sol, int(n_steps), float(rtol), float(atol),
                     int(max_steps))
-    return _aca(cfg, params, z0, jnp.asarray(t0, jnp.float32),
-                jnp.asarray(t1, jnp.float32))
+    scalar = ts is None
+    grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
+    traj = _aca_grid(cfg, params, z0, grid)
+    return _tm(lambda b: b[-1], traj) if scalar else traj

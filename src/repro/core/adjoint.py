@@ -18,11 +18,17 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from jax import lax
+
 from .alf import (alf_step, alf_step_with_error, check_eta, init_velocity,
-                  tree_zeros_like)
-from .integrate import integrate_adaptive, integrate_fixed
+                  tree_add, tree_zeros_like)
+from .integrate import (as_time_grid, integrate_adaptive, integrate_fixed,
+                        prepend_row, reverse_segment_sweep, scalar_time_grid,
+                        segment_pairs)
 from .solvers import ButcherTableau, get_solver
 from .stepsize import error_ratio
+
+_tm = jax.tree_util.tree_map
 
 Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
@@ -83,39 +89,55 @@ def _integrate(cfg: AdjointConfig, dyn: Dynamics, params: Pytree,
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _adjoint(cfg: AdjointConfig, params: Pytree, z0: Pytree,
-             t0: jax.Array, t1: jax.Array) -> Pytree:
-    return _integrate(cfg, cfg.f, params, z0, t0, t1)
+def _adjoint_grid(cfg: AdjointConfig, params: Pytree, z0: Pytree,
+                  ts: jax.Array) -> Pytree:
+    z_traj, _ = _adjoint_grid_fwd(cfg, params, z0, ts)
+    return z_traj
 
 
-def _adjoint_fwd(cfg, params, z0, t0, t1):
-    zT = _integrate(cfg, cfg.f, params, z0, t0, t1)
-    return zT, (params, zT, t0, t1)  # O(1) residuals
+def _adjoint_grid_fwd(cfg, params, z0, ts):
+    def seg(z, pair):
+        z1 = _integrate(cfg, cfg.f, params, z, pair[0], pair[1])
+        return z1, z1
+
+    _, tail = lax.scan(seg, z0, segment_pairs(ts))
+    z_traj = prepend_row(z0, tail)
+    return z_traj, (params, z_traj, ts)  # O(T) residuals
 
 
-def _adjoint_bwd(cfg, res, g_zT):
-    params, zT, t0, t1 = res
+def _adjoint_grid_bwd(cfg, res, g):
+    params, z_traj, ts = res
 
     def aug_dyn(p, aug, t):
         z, a, _g = aug
         f_val, vjp_fn = jax.vjp(lambda pp, zz: cfg.f(pp, zz, t), p, z)
         dp, dz = vjp_fn(a)
-        neg = jax.tree_util.tree_map(jnp.negative, (dz, dp))
+        neg = _tm(jnp.negative, (dz, dp))
         return (f_val, neg[0], neg[1])
 
-    aug0 = (zT, g_zT, tree_zeros_like(params))
-    # Reverse-time IVP: integrate the augmented system from t1 back to t0.
-    zrec, a_z, g_params = _integrate(cfg, aug_dyn, params, aug0, t1, t0)
-    zero_t = jnp.zeros_like(jnp.asarray(t0))
-    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+    def seg(carry, g_k1, xs_k):
+        a_z, g_p = carry
+        z_k1, t0k, t1k = xs_k
+        # Reverse-time IVP over [t1k -> t0k]; z restarts from the stored
+        # observation (torchdiffeq-style) so reverse drift does not compound
+        # across segments, and the cotangent g[k+1] is injected into a(t).
+        aug0 = (z_k1, tree_add(a_z, g_k1), g_p)
+        _zrec, a_z, g_p = _integrate(cfg, aug_dyn, params, aug0, t1k, t0k)
+        return (a_z, g_p)
+
+    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g)),
+              tree_zeros_like(params))
+    a_z, g_params = reverse_segment_sweep(
+        seg, carry0, g, (_tm(lambda b: b[1:], z_traj), ts[:-1], ts[1:]))
+    return g_params, a_z, jnp.zeros_like(ts)
 
 
-_adjoint.defvjp(_adjoint_fwd, _adjoint_bwd)
+_adjoint_grid.defvjp(_adjoint_grid_fwd, _adjoint_grid_bwd)
 
 
 def odeint_adjoint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-                   solver: str = "dopri5", n_steps: int = 0, eta: float = 1.0,
-                   rtol: float = 1e-2, atol: float = 1e-3,
+                   ts=None, solver: str = "dopri5", n_steps: int = 0,
+                   eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                    max_steps: int = 64) -> Pytree:
     sol = get_solver(solver)
     if solver == "alf":
@@ -124,5 +146,7 @@ def odeint_adjoint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
         raise ValueError(f"solver {solver!r} has no embedded error estimate")
     cfg = AdjointConfig(f, sol, solver, int(n_steps), float(eta), float(rtol),
                         float(atol), int(max_steps))
-    return _adjoint(cfg, params, z0, jnp.asarray(t0, jnp.float32),
-                    jnp.asarray(t1, jnp.float32))
+    scalar = ts is None
+    grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
+    traj = _adjoint_grid(cfg, params, z0, grid)
+    return _tm(lambda b: b[-1], traj) if scalar else traj

@@ -22,17 +22,37 @@ METHODS = tuple(_DEFAULT_SOLVER)
 
 
 def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-           method: str = "mali", solver: str | None = None, n_steps: int = 0,
-           eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
-           max_steps: int = 64, fused_bwd: bool = True) -> Pytree:
-    """Integrate dz/dt = f(params, z, t) over [t0, t1].
+           ts=None, method: str = "mali", solver: str | None = None,
+           n_steps: int = 0, eta: float = 1.0, rtol: float = 1e-2,
+           atol: float = 1e-3, max_steps: int = 64,
+           fused_bwd: bool = True) -> Pytree:
+    """Integrate dz/dt = f(params, z, t).
+
+    Two output shapes (torchdiffeq-compatible):
+
+    * ``ts=None`` (default): integrate over [t0, t1] and return ``z(t1)``
+      with the same pytree structure as ``z0``. Internally this is the
+      length-1 observation grid ``[t0, t1]``.
+    * ``ts`` an increasing-or-decreasing 1-D grid of T >= 2 timepoints
+      (array or sequence): return the trajectory pytree whose leaves gain a
+      leading axis T, with ``traj[k] = z(ts[k])`` and ``traj[0] == z0``.
+      ``t0``/``t1`` are ignored. One compiled scan carries the state across
+      segment boundaries — no Python-side interval chaining — and for MALI
+      the backward-pass residual set is the per-observation ``(z_k, v_k)``
+      pairs: O(T * N_z), constant in the number of solver steps.
 
     method: gradient-estimation strategy — 'mali' (paper), 'naive',
             'aca', 'adjoint' (baselines; Table 1).
     solver: 'alf' | 'euler' | 'heun_euler' | 'midpoint' | 'rk23' | 'rk4' |
             'dopri5'. MALI requires 'alf'.
-    n_steps > 0 -> fixed uniform grid; n_steps == 0 -> adaptive (rtol/atol,
-            bounded by max_steps trials).
+    n_steps > 0 -> fixed uniform grid (per observation segment);
+            n_steps == 0 -> adaptive (rtol/atol, bounded by max_steps trials
+            per segment).
+
+    Example::
+
+        traj = odeint(f, params, z0, ts=jnp.linspace(0.0, 1.0, 8),
+                      method="mali", n_steps=4)      # traj: (8, *z0.shape)
     """
     if method not in _DEFAULT_SOLVER:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
@@ -41,18 +61,18 @@ def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     if method == "mali":
         if solver != "alf":
             raise ValueError("MALI is defined for the ALF solver only")
-        return odeint_mali(f, params, z0, t0, t1, n_steps=n_steps, eta=eta,
-                           rtol=rtol, atol=atol, max_steps=max_steps,
+        return odeint_mali(f, params, z0, t0, t1, ts=ts, n_steps=n_steps,
+                           eta=eta, rtol=rtol, atol=atol, max_steps=max_steps,
                            fused_bwd=fused_bwd)
     if method == "naive":
-        return odeint_naive(f, params, z0, t0, t1, solver=solver,
+        return odeint_naive(f, params, z0, t0, t1, ts=ts, solver=solver,
                             n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
                             max_steps=max_steps)
     if method == "aca":
-        return odeint_aca(f, params, z0, t0, t1, solver=solver,
+        return odeint_aca(f, params, z0, t0, t1, ts=ts, solver=solver,
                           n_steps=n_steps, rtol=rtol, atol=atol,
                           max_steps=max_steps)
-    return odeint_adjoint(f, params, z0, t0, t1, solver=solver,
+    return odeint_adjoint(f, params, z0, t0, t1, ts=ts, solver=solver,
                           n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
                           max_steps=max_steps)
 

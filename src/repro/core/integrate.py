@@ -34,6 +34,21 @@ def tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
     return _tm(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
+def as_time_grid(ts) -> jax.Array:
+    """Validate/convert an observation grid: 1-D, at least two timepoints."""
+    grid = jnp.asarray(ts, jnp.float32)
+    if grid.ndim != 1 or grid.shape[0] < 2:
+        raise ValueError("ts must be a 1-D grid of at least 2 timepoints "
+                         f"(got shape {grid.shape})")
+    return grid
+
+
+def scalar_time_grid(t0, t1) -> jax.Array:
+    """The length-1 observation grid [t0, t1] backing the scalar odeint path."""
+    return jnp.stack([jnp.asarray(t0, jnp.float32),
+                      jnp.asarray(t1, jnp.float32)])
+
+
 def fixed_grid_times(t0: jax.Array, t1: jax.Array, n_steps: int):
     """(t_i, h) for a uniform grid; forward and backward passes must use the
     *identical* arithmetic (t_i = t0 + i*h) for MALI's exact reconstruction."""
@@ -53,6 +68,60 @@ def integrate_fixed(step: StepFn, state0: Pytree, t0: jax.Array,
     return state
 
 
+def segment_pairs(ts: jax.Array) -> jax.Array:
+    """(T-1, 2) array of consecutive (ts[k], ts[k+1]) segment bounds."""
+    return jnp.stack([ts[:-1], ts[1:]], -1)
+
+
+def prepend_row(state0: Pytree, tail: Pytree) -> Pytree:
+    """Stack ``state0`` in front of a scanned segment-end trajectory, giving
+    the (T, ...) observation trajectory with ``traj[0] == state0``."""
+    return _tm(lambda s0, tl: jnp.concatenate([s0[None], tl], 0), state0, tail)
+
+
+def reverse_segment_sweep(seg_fn: Callable, carry0: Pytree, g: Pytree,
+                          extras: Tuple = ()) -> Tuple:
+    """Shared backward scaffold for the observation-grid custom_vjps.
+
+    Scans ``seg_fn(carry, g_k1, extras_k) -> carry`` over segments
+    k = T-2 .. 0 in reverse, feeding each segment its end-observation
+    cotangent ``g_k1 = g[k+1]`` and the k-th slice of every ``extras`` entry,
+    then adds the ``traj[0] = z0`` identity-row cotangent ``g[0]`` into
+    ``carry[0]`` (by convention the state adjoint a_z). Returns the final
+    carry tuple.
+    """
+    xs = (_tm(lambda b: b[1:], g),) + tuple(extras)
+
+    def wrapped(carry, x):
+        return seg_fn(carry, x[0], x[1:]), None
+
+    carry, _ = lax.scan(wrapped, carry0, xs, reverse=True)
+    a_z = _tm(jnp.add, carry[0], _tm(lambda b: b[0], g))
+    return (a_z,) + tuple(carry[1:])
+
+
+def integrate_fixed_grid(step: StepFn, state0: Pytree, ts: jax.Array,
+                         n_steps: int) -> Tuple[Pytree, Pytree]:
+    """Integrate across an observation grid ``ts`` (shape ``(T,)``) with
+    ``n_steps`` uniform sub-steps per segment.
+
+    One ``lax.scan`` over the T-1 segments whose carry crosses segment
+    boundaries (the inner sub-step scan is nested in its body, so the whole
+    grid compiles once — no per-segment retracing). Emits the state at every
+    requested ``ts[k]``; sub-step times use the *identical* arithmetic as
+    :func:`fixed_grid_times` so MALI's backward reconstruction is exact.
+
+    Returns ``(state_T, traj)`` where ``traj`` stacks the state at each
+    ``ts[k]`` along a new leading axis (``traj[0] == state0``).
+    """
+    def seg(state, pair):
+        state = integrate_fixed(step, state, pair[0], pair[1], n_steps)
+        return state, state
+
+    stateT, tail = lax.scan(seg, state0, segment_pairs(ts))
+    return stateT, prepend_row(state0, tail)
+
+
 class AdaptiveResult(NamedTuple):
     state: Pytree            # final state at t1
     ts: jax.Array            # (max_steps,) accepted step *start* times
@@ -60,6 +129,7 @@ class AdaptiveResult(NamedTuple):
     n_accepted: jax.Array    # int32
     n_evals: jax.Array       # int32 trial count (= f-eval multiplier)
     state_traj: Optional[Pytree]  # per-accepted-step start states (if recorded)
+    h_final: jax.Array       # controller's step proposal at exit (warm start)
 
 
 def integrate_adaptive(
@@ -118,7 +188,56 @@ def integrate_adaptive(
             jnp.asarray(0, jnp.int32), ts_buf, hs_buf, traj_buf)
     (state, t, h, done, n_acc, n_ev, ts, hs, traj), _ = lax.scan(
         body, init, None, length=max_steps)
-    return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj)
+    return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj, h)
+
+
+class GridAdaptiveResult(NamedTuple):
+    state: Pytree            # final state at ts[-1]
+    traj: Pytree             # (T, ...) state at each ts[k]; traj[0] == state0
+    ts: jax.Array            # (T-1, max_steps) accepted step start times
+    hs: jax.Array            # (T-1, max_steps) accepted step sizes
+    n_accepted: jax.Array    # (T-1,) int32 accepted steps per segment
+    n_evals: jax.Array       # int32 total trial count across all segments
+    state_traj: Optional[Pytree]  # (T-1, max_steps, ...) per-step start states
+
+
+def integrate_adaptive_grid(
+    trial: TrialFn,
+    state0: Pytree,
+    ts: jax.Array,
+    *,
+    order: int,
+    rtol: float,
+    atol: float,
+    max_steps: int,
+    record_states: bool = False,
+) -> GridAdaptiveResult:
+    """Adaptive integration across an observation grid ``ts`` (shape (T,)).
+
+    One ``lax.scan`` over segments whose carry (the integrator state AND the
+    controller's step proposal, warm-starting each segment at the previous
+    segment's converged step size) crosses segment boundaries; each segment
+    runs the bounded adaptive controller with its own ``max_steps`` trial
+    budget. Per-segment step bookkeeping keeps the backward-pass residual set
+    at O(T) scalars + O(T * N_z) states.
+    """
+    h_start = initial_step_size(rtol, atol, ts[1] - ts[0])
+
+    def seg(carry, pair):
+        state, n_ev, h_prev = carry
+        span = pair[1] - pair[0]
+        h0 = jnp.sign(span) * jnp.minimum(jnp.abs(h_prev), jnp.abs(span))
+        out = integrate_adaptive(trial, state, pair[0], pair[1], order=order,
+                                 rtol=rtol, atol=atol, max_steps=max_steps,
+                                 h0=h0, record_states=record_states)
+        ys = (out.state, out.ts, out.hs, out.n_accepted, out.state_traj)
+        return (out.state, n_ev + out.n_evals, out.h_final), ys
+
+    carry0 = (state0, jnp.asarray(0, jnp.int32), h_start)
+    (stateT, n_ev, _), (tail, seg_ts, seg_hs, seg_acc, seg_traj) = lax.scan(
+        seg, carry0, segment_pairs(ts))
+    return GridAdaptiveResult(stateT, prepend_row(state0, tail), seg_ts,
+                              seg_hs, seg_acc, n_ev, seg_traj)
 
 
 def reverse_masked_scan(body: Callable, carry0: Pytree, ts: jax.Array,
@@ -127,14 +246,19 @@ def reverse_masked_scan(body: Callable, carry0: Pytree, ts: jax.Array,
     """Scan i = n_accepted-1 .. 0 over recorded (t_i, h_i[, extras_i]) with
     identity pass-through for the padding slots i >= n_accepted.
 
-    ``body(carry, t, h, extra) -> carry`` is only applied to live slots.
+    ``body(carry, t, h) -> carry`` is only applied to live slots; when
+    ``extras`` is given the body is called as ``body(carry, t, h, extra)``
+    with the i-th slice of every extras leaf (ACA's checkpointed states,
+    per-segment metadata on the observation-grid path, ...).
     """
     idxs = jnp.arange(max_steps - 1, -1, -1)
 
     def wrapped(carry, i):
         live = i < n_accepted
-        extra_i = None if extras is None else _tm(lambda b: b[i], extras)
-        new_carry = body(carry, ts[i], hs[i], extra_i)
+        if extras is None:
+            new_carry = body(carry, ts[i], hs[i])
+        else:
+            new_carry = body(carry, ts[i], hs[i], _tm(lambda b: b[i], extras))
         return tree_where(live, new_carry, carry), None
 
     carry, _ = lax.scan(wrapped, carry0, idxs)

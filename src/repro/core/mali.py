@@ -1,17 +1,22 @@
 """MALI: Memory-efficient ALF Integrator (paper Algo 4) as a jax.custom_vjp.
 
-Forward: integrate with ALF (fixed grid or adaptive), keep ONLY the end-time
-augmented state (z_T, v_T) and — in the adaptive case — the accepted step
-sizes / start times. No per-step activations are saved: the VJP residual set
-is O(N_z), constant in the number of solver steps.
+The integrator is built around an *observation grid* ``ts`` of T timepoints
+(the torchdiffeq ``odeint(func, y0, t)`` shape): the forward pass is a single
+scan whose carry (z, v) crosses segment boundaries, emitting the augmented
+state at every requested ``ts[k]``. The VJP residual set is exactly the
+per-observation ``(z_k, v_k)`` pairs — O(T * N_z), *constant in the number of
+solver steps*. The scalar ``t0 -> t1`` path is the length-1 grid
+``ts = [t0, t1]``.
 
-Backward: reconstruct the trajectory step-by-step with the exact ALF inverse
-(psi^-1) and run one local VJP of psi per accepted step, accumulating the
+Backward: per segment (in reverse), reconstruct the trajectory step-by-step
+with the exact ALF inverse (psi^-1) starting from the stored segment-end
+state, and run one local VJP of psi per accepted step, accumulating the
 adjoint state a(t) and dL/dtheta — the discretized Eq. (2)/(3) of the paper.
-The stepsize *search* (rejected trials) is excluded, so the effective
-computation-graph depth is N_f x N_t (Table 1, MALI column).
+The trajectory cotangent g[k] is injected into a(t) as the sweep crosses
+observation k. The stepsize *search* (rejected trials) is excluded, so the
+effective computation-graph depth is N_f x N_t (Table 1, MALI column).
 
-Gradients w.r.t. the integration bounds t0/t1 are not propagated (zeros); the
+Gradients w.r.t. the observation times are not propagated (zeros); the
 framework never differentiates them.
 """
 from __future__ import annotations
@@ -25,8 +30,10 @@ from jax import lax
 
 from .alf import (alf_inverse, alf_step, alf_step_with_error, check_eta,
                   init_velocity, tree_add, tree_zeros_like)
-from .integrate import (fixed_grid_times, integrate_adaptive, integrate_fixed,
-                        reverse_masked_scan)
+from .integrate import (as_time_grid, fixed_grid_times,
+                        integrate_adaptive_grid, integrate_fixed_grid,
+                        reverse_masked_scan, reverse_segment_sweep,
+                        scalar_time_grid)
 from .stepsize import error_ratio
 
 _tm = jax.tree_util.tree_map
@@ -46,31 +53,21 @@ class MaliConfig(NamedTuple):
     fused_bwd: bool = True  # share the inverse's f-eval with the local VJP
 
 
-# ---------------------------------------------------------------------------
-# Fixed-step MALI
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _mali_fixed(cfg: MaliConfig, params: Pytree, z0: Pytree,
-                t0: jax.Array, t1: jax.Array) -> Pytree:
-    zT, _vT = _mali_fixed_forward(cfg, params, z0, t0, t1)
-    return zT
+def _traj_row(traj: Pytree, k: int) -> Pytree:
+    return _tm(lambda b: b[k], traj)
 
 
-def _mali_fixed_forward(cfg, params, z0, t0, t1):
-    v0 = init_velocity(cfg.f, params, z0, t0)
-
-    def step(state, t, h):
-        z, v = state
-        return alf_step(cfg.f, params, z, v, t, h, cfg.eta)
-
-    return integrate_fixed(step, (z0, v0), t0, t1, cfg.n_steps)
-
-
-def _mali_fixed_fwd(cfg, params, z0, t0, t1):
-    zT, vT = _mali_fixed_forward(cfg, params, z0, t0, t1)
-    # Residuals: end state only — O(N_z), constant in n_steps.
-    return zT, (params, zT, vT, t0, t1)
+def _step_backward(cfg: MaliConfig, params, z_i, v_i, t_start, h, a_z, a_v):
+    """One reverse step: reconstruct the step input via psi^-1 and backprop
+    psi, either fused (3 f-eval-equivalents) or via the reference two-pass."""
+    if cfg.fused_bwd:
+        return _fused_inverse_and_vjp(cfg.f, cfg.eta, params, z_i, v_i,
+                                      t_start + h, h, a_z, a_v)
+    z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i, t_start + h, h,
+                                 cfg.eta)
+    dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev, v_prev,
+                                 t_start, h, a_z, a_v)
+    return z_prev, v_prev, dz, dv, dp
 
 
 def _local_step_vjp(f, eta, params, z_prev, v_prev, t_prev, h, a_z, a_v):
@@ -132,53 +129,84 @@ def _close_v0_vjp(f, params, z0, t0, a_z, a_v, g_params):
     return tree_add(g_params, dp), tree_add(a_z, dz)
 
 
-def _mali_fixed_bwd(cfg, res, g_zT):
-    params, zT, vT, t0, t1 = res
-    ts, h = fixed_grid_times(t0, t1, cfg.n_steps)
-
-    a_z = g_zT
-    a_v = tree_zeros_like(vT)
-    g_params = tree_zeros_like(params)
-
-    def body(carry, t_start):
-        z_i, v_i, a_z, a_v, g_p = carry
-        if cfg.fused_bwd:
-            z_prev, v_prev, dz, dv, dp = _fused_inverse_and_vjp(
-                cfg.f, cfg.eta, params, z_i, v_i, t_start + h, h, a_z, a_v)
-        else:
-            # Reconstruct the step input exactly via the ALF inverse ...
-            z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i,
-                                         t_start + h, h, cfg.eta)
-            # ... then backprop through the (re-played) accepted step only.
-            dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev,
-                                         v_prev, t_start, h, a_z, a_v)
-        return (z_prev, v_prev, dz, dv, tree_add(g_p, dp)), None
-
-    carry0 = (zT, vT, a_z, a_v, g_params)
-    (z0_rec, v0_rec, a_z, a_v, g_params), _ = lax.scan(
-        body, carry0, ts, reverse=True)
-
-    g_params, a_z = _close_v0_vjp(cfg.f, params, z0_rec, t0, a_z, a_v, g_params)
-    zero_t = jnp.zeros_like(jnp.asarray(t0))
-    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
-
-
-_mali_fixed.defvjp(_mali_fixed_fwd, _mali_fixed_bwd)
-
-
 # ---------------------------------------------------------------------------
-# Adaptive-step MALI
+# Fixed-step MALI over an observation grid
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _mali_adaptive(cfg: MaliConfig, params: Pytree, z0: Pytree,
-                   t0: jax.Array, t1: jax.Array) -> Pytree:
-    out = _mali_adaptive_forward(cfg, params, z0, t0, t1)
-    return out.state[0]
+def _mali_grid_fixed(cfg: MaliConfig, params: Pytree, z0: Pytree,
+                     ts: jax.Array) -> Pytree:
+    z_traj, _ = _mali_grid_fixed_forward(cfg, params, z0, ts)
+    return z_traj
 
 
-def _mali_adaptive_forward(cfg, params, z0, t0, t1):
-    v0 = init_velocity(cfg.f, params, z0, t0)
+def _mali_grid_fixed_forward(cfg, params, z0, ts):
+    v0 = init_velocity(cfg.f, params, z0, ts[0])
+
+    def step(state, t, h):
+        z, v = state
+        return alf_step(cfg.f, params, z, v, t, h, cfg.eta)
+
+    _, traj = integrate_fixed_grid(step, (z0, v0), ts, cfg.n_steps)
+    return traj  # (z_traj, v_traj), each with leading axis T
+
+
+def _mali_grid_fixed_fwd(cfg, params, z0, ts):
+    z_traj, v_traj = _mali_grid_fixed_forward(cfg, params, z0, ts)
+    # Residuals: the per-observation (z_k, v_k) pairs — O(T * N_z),
+    # constant in n_steps.
+    return z_traj, (params, z_traj, v_traj, ts)
+
+
+def _mali_grid_fixed_bwd(cfg, res, g):
+    params, z_traj, v_traj, ts = res
+
+    def seg(carry, g_k1, xs_k):
+        a_z, a_v, g_p = carry
+        z_k1, v_k1, t0k, t1k = xs_k
+        # The stored segment-end state is the exact forward value: resetting
+        # to it (rather than chaining psi^-1 across segments) stops float
+        # drift from accumulating across observations.
+        a_z = tree_add(a_z, g_k1)
+        step_ts, h = fixed_grid_times(t0k, t1k, cfg.n_steps)
+
+        def body(c, t_start):
+            z_i, v_i, az, av, gp = c
+            z_prev, v_prev, dz, dv, dp = _step_backward(
+                cfg, params, z_i, v_i, t_start, h, az, av)
+            return (z_prev, v_prev, dz, dv, tree_add(gp, dp)), None
+
+        (_, _, a_z, a_v, g_p), _ = lax.scan(
+            body, (z_k1, v_k1, a_z, a_v, g_p), step_ts, reverse=True)
+        return (a_z, a_v, g_p)
+
+    z0 = _traj_row(z_traj, 0)
+    carry0 = (tree_zeros_like(z0), tree_zeros_like(_traj_row(v_traj, 0)),
+              tree_zeros_like(params))
+    extras = (_tm(lambda b: b[1:], z_traj), _tm(lambda b: b[1:], v_traj),
+              ts[:-1], ts[1:])
+    a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g, extras)
+
+    g_params, a_z = _close_v0_vjp(cfg.f, params, z0, ts[0], a_z, a_v, g_params)
+    return g_params, a_z, jnp.zeros_like(ts)
+
+
+_mali_grid_fixed.defvjp(_mali_grid_fixed_fwd, _mali_grid_fixed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-step MALI over an observation grid
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mali_grid_adaptive(cfg: MaliConfig, params: Pytree, z0: Pytree,
+                        ts: jax.Array) -> Pytree:
+    out = _mali_grid_adaptive_forward(cfg, params, z0, ts)
+    return out.traj[0]
+
+
+def _mali_grid_adaptive_forward(cfg, params, z0, ts):
+    v0 = init_velocity(cfg.f, params, z0, ts[0])
 
     def trial(state, t, h):
         z, v = state
@@ -186,45 +214,50 @@ def _mali_adaptive_forward(cfg, params, z0, t0, t1):
         ratio = error_ratio(err, z, z1, cfg.rtol, cfg.atol)
         return (z1, v1), ratio
 
-    return integrate_adaptive(trial, (z0, v0), t0, t1, order=2,
-                              rtol=cfg.rtol, atol=cfg.atol,
-                              max_steps=cfg.max_steps)
+    return integrate_adaptive_grid(trial, (z0, v0), ts, order=2,
+                                   rtol=cfg.rtol, atol=cfg.atol,
+                                   max_steps=cfg.max_steps)
 
 
-def _mali_adaptive_fwd(cfg, params, z0, t0, t1):
-    out = _mali_adaptive_forward(cfg, params, z0, t0, t1)
-    zT, vT = out.state
-    # Residuals: end state + O(max_steps) scalars (the accepted h_i / t_i) —
-    # still O(N_z) in the state dimension, constant in step count.
-    res = (params, zT, vT, out.ts, out.hs, out.n_accepted, t0, t1)
-    return zT, res
+def _mali_grid_adaptive_fwd(cfg, params, z0, ts):
+    out = _mali_grid_adaptive_forward(cfg, params, z0, ts)
+    z_traj, v_traj = out.traj
+    # Residuals: per-observation (z_k, v_k) + O(T * max_steps) scalars (the
+    # accepted h_i / t_i per segment) — still constant in solver-step count.
+    res = (params, z_traj, v_traj, out.ts, out.hs, out.n_accepted, ts)
+    return z_traj, res
 
 
-def _mali_adaptive_bwd(cfg, res, g_zT):
-    params, zT, vT, ts, hs, n_acc, t0, t1 = res
+def _mali_grid_adaptive_bwd(cfg, res, g):
+    params, z_traj, v_traj, seg_ts, seg_hs, seg_acc, ts = res
 
-    def body(carry, t_start, h, _extra):
-        z_i, v_i, a_z, a_v, g_p = carry
-        if cfg.fused_bwd:
-            z_prev, v_prev, dz, dv, dp = _fused_inverse_and_vjp(
-                cfg.f, cfg.eta, params, z_i, v_i, t_start + h, h, a_z, a_v)
-        else:
-            z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i,
-                                         t_start + h, h, cfg.eta)
-            dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev,
-                                         v_prev, t_start, h, a_z, a_v)
-        return (z_prev, v_prev, dz, dv, tree_add(g_p, dp))
+    def step_body(c, t_start, h):
+        z_i, v_i, az, av, gp = c
+        z_prev, v_prev, dz, dv, dp = _step_backward(
+            cfg, params, z_i, v_i, t_start, h, az, av)
+        return (z_prev, v_prev, dz, dv, tree_add(gp, dp))
 
-    carry0 = (zT, vT, g_zT, tree_zeros_like(vT), tree_zeros_like(params))
-    z0_rec, v0_rec, a_z, a_v, g_params = reverse_masked_scan(
-        body, carry0, ts, hs, n_acc, cfg.max_steps)
+    def seg(carry, g_k1, xs_k):
+        a_z, a_v, g_p = carry
+        z_k1, v_k1, ts_k, hs_k, n_k = xs_k
+        a_z = tree_add(a_z, g_k1)
+        carry_k = (z_k1, v_k1, a_z, a_v, g_p)
+        _, _, a_z, a_v, g_p = reverse_masked_scan(
+            step_body, carry_k, ts_k, hs_k, n_k, cfg.max_steps)
+        return (a_z, a_v, g_p)
 
-    g_params, a_z = _close_v0_vjp(cfg.f, params, z0_rec, t0, a_z, a_v, g_params)
-    zero_t = jnp.zeros_like(jnp.asarray(t0))
-    return g_params, a_z, zero_t, jnp.zeros_like(jnp.asarray(t1))
+    z0 = _traj_row(z_traj, 0)
+    carry0 = (tree_zeros_like(z0), tree_zeros_like(_traj_row(v_traj, 0)),
+              tree_zeros_like(params))
+    extras = (_tm(lambda b: b[1:], z_traj), _tm(lambda b: b[1:], v_traj),
+              seg_ts, seg_hs, seg_acc)
+    a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g, extras)
+
+    g_params, a_z = _close_v0_vjp(cfg.f, params, z0, ts[0], a_z, a_v, g_params)
+    return g_params, a_z, jnp.zeros_like(ts)
 
 
-_mali_adaptive.defvjp(_mali_adaptive_fwd, _mali_adaptive_bwd)
+_mali_grid_adaptive.defvjp(_mali_grid_adaptive_fwd, _mali_grid_adaptive_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -232,23 +265,30 @@ _mali_adaptive.defvjp(_mali_adaptive_fwd, _mali_adaptive_bwd)
 # ---------------------------------------------------------------------------
 
 def odeint_mali(f: Dynamics, params: Pytree, z0: Pytree,
-                t0=0.0, t1=1.0, *, n_steps: int = 0, eta: float = 1.0,
-                rtol: float = 1e-2, atol: float = 1e-3,
+                t0=0.0, t1=1.0, *, ts=None, n_steps: int = 0,
+                eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                 max_steps: int = 64, fused_bwd: bool = True) -> Pytree:
-    """Integrate dz/dt = f(params, z, t) from t0 to t1 with MALI gradients.
+    """Integrate dz/dt = f(params, z, t) with MALI gradients.
 
-    ``n_steps > 0`` selects the fixed uniform grid (the paper's large-scale
-    setting, e.g. h=0.25 -> n_steps=4 on [0,1]); ``n_steps == 0`` selects the
-    adaptive controller with ``rtol/atol`` and a ``max_steps`` trial budget.
+    Without ``ts``: integrate t0 -> t1 and return z(t1) (internally the
+    length-1 observation grid ``[t0, t1]``). With ``ts`` (shape (T,), T >= 2):
+    return the trajectory pytree with leading axis T, ``traj[0] == z0``.
+
+    ``n_steps > 0`` selects the fixed uniform grid *per segment* (the paper's
+    large-scale setting, e.g. h=0.25 -> n_steps=4 on [0,1]); ``n_steps == 0``
+    selects the adaptive controller with ``rtol/atol`` and a per-segment
+    ``max_steps`` trial budget.
     """
     check_eta(eta)
-    t0 = jnp.asarray(t0, jnp.float32)
-    t1 = jnp.asarray(t1, jnp.float32)
     cfg = MaliConfig(f, int(n_steps), float(eta), float(rtol), float(atol),
                      int(max_steps), bool(fused_bwd))
+    scalar = ts is None
+    grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
     if n_steps > 0:
-        return _mali_fixed(cfg, params, z0, t0, t1)
-    return _mali_adaptive(cfg, params, z0, t0, t1)
+        traj = _mali_grid_fixed(cfg, params, z0, grid)
+    else:
+        traj = _mali_grid_adaptive(cfg, params, z0, grid)
+    return _traj_row(traj, -1) if scalar else traj
 
 
 def mali_forward_stats(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0,
@@ -258,6 +298,5 @@ def mali_forward_stats(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0,
     benchmarking the paper's m / N_t accounting."""
     check_eta(eta)
     cfg = MaliConfig(f, 0, float(eta), float(rtol), float(atol), int(max_steps))
-    out = _mali_adaptive_forward(cfg, params, z0, jnp.asarray(t0, jnp.float32),
-                                 jnp.asarray(t1, jnp.float32))
-    return out.state[0], out.n_accepted, out.n_evals
+    out = _mali_grid_adaptive_forward(cfg, params, z0, scalar_time_grid(t0, t1))
+    return out.state[0], jnp.sum(out.n_accepted), out.n_evals

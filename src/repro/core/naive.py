@@ -8,7 +8,9 @@ N_z*N_f*N_t*m, graph depth N_f*N_t*m).
 
 Supports the RK tableaus and the ALF solver (augmented (z, v) state with
 v0 = f(z0, t0)); the latter gives the gradient-equivalence oracle for MALI:
-naive-ALF and MALI must agree to float precision on the same fixed grid.
+naive-ALF and MALI must agree to float precision on the same fixed grid —
+both for the end state and for every point of an observation-grid
+trajectory (``ts``), since both run the identical segmented forward.
 """
 from __future__ import annotations
 
@@ -18,42 +20,49 @@ import jax
 import jax.numpy as jnp
 
 from .alf import alf_step, alf_step_with_error, check_eta, init_velocity
-from .integrate import integrate_adaptive, integrate_fixed
+from .integrate import (as_time_grid, integrate_adaptive_grid,
+                        integrate_fixed_grid, scalar_time_grid)
 from .solvers import ButcherTableau, get_solver
 from .stepsize import error_ratio
+
+_tm = jax.tree_util.tree_map
 
 Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 
 def odeint_naive(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-                 solver: str = "alf", n_steps: int = 0, eta: float = 1.0,
-                 rtol: float = 1e-2, atol: float = 1e-3,
+                 ts=None, solver: str = "alf", n_steps: int = 0,
+                 eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                  max_steps: int = 64) -> Pytree:
-    t0 = jnp.asarray(t0, jnp.float32)
-    t1 = jnp.asarray(t1, jnp.float32)
+    """Differentiable integration; with ``ts`` returns the (T, ...) trajectory
+    (``traj[0] == z0``), otherwise z(t1) via the length-1 grid [t0, t1]."""
     sol = get_solver(solver)
+    scalar = ts is None
+    grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
 
     if solver == "alf":
         check_eta(eta)
-        v0 = init_velocity(f, params, z0, t0)
+        v0 = init_velocity(f, params, z0, grid[0])
 
         if n_steps > 0:
             def step(state, t, h):
                 z, v = state
                 return alf_step(f, params, z, v, t, h, eta)
 
-            zT, _ = integrate_fixed(step, (z0, v0), t0, t1, n_steps)
-            return zT
+            _, (z_traj, _) = integrate_fixed_grid(step, (z0, v0), grid,
+                                                  n_steps)
+        else:
+            def trial(state, t, h):
+                z, v = state
+                z1, v1, err = alf_step_with_error(f, params, z, v, t, h, eta)
+                return (z1, v1), error_ratio(err, z, z1, rtol, atol)
 
-        def trial(state, t, h):
-            z, v = state
-            z1, v1, err = alf_step_with_error(f, params, z, v, t, h, eta)
-            return (z1, v1), error_ratio(err, z, z1, rtol, atol)
-
-        out = integrate_adaptive(trial, (z0, v0), t0, t1, order=2, rtol=rtol,
-                                 atol=atol, max_steps=max_steps)
-        return out.state[0]
+            out = integrate_adaptive_grid(trial, (z0, v0), grid, order=2,
+                                          rtol=rtol, atol=atol,
+                                          max_steps=max_steps)
+            z_traj, _ = out.traj
+        return _tm(lambda b: b[-1], z_traj) if scalar else z_traj
 
     assert isinstance(sol, ButcherTableau)
     if n_steps > 0:
@@ -61,7 +70,8 @@ def odeint_naive(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
             z1, _ = sol.step(f, params, z, t, h)
             return z1
 
-        return integrate_fixed(step, z0, t0, t1, n_steps)
+        _, z_traj = integrate_fixed_grid(step, z0, grid, n_steps)
+        return _tm(lambda b: b[-1], z_traj) if scalar else z_traj
 
     if sol.b_err is None:
         raise ValueError(f"solver {solver!r} has no embedded error estimate; "
@@ -71,6 +81,6 @@ def odeint_naive(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
         z1, err = sol.step(f, params, z, t, h)
         return z1, error_ratio(err, z, z1, rtol, atol)
 
-    out = integrate_adaptive(trial, z0, t0, t1, order=sol.order, rtol=rtol,
-                             atol=atol, max_steps=max_steps)
-    return out.state
+    out = integrate_adaptive_grid(trial, z0, grid, order=sol.order, rtol=rtol,
+                                  atol=atol, max_steps=max_steps)
+    return _tm(lambda b: b[-1], out.traj) if scalar else out.traj

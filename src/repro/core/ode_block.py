@@ -5,11 +5,17 @@ A residual block ``y = x + g(x)`` is the one-step Euler discretization of
 continuous integration ``y = z(T), z(0) = x`` (paper Sec 4.2), sharing the
 same parameterization g. The gradient method (MALI / adjoint / ACA / naive),
 solver, step count/tolerances and damping are all config knobs.
+
+With ``obs_times`` set, the block exposes the full observation-grid
+trajectory (one native ``odeint(..., ts=...)`` call — latent-ODE decoders,
+CNF visualization, deep supervision) instead of only the end state.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional, Tuple
+
+import jax.numpy as jnp
 
 from .api import odeint
 
@@ -29,23 +35,34 @@ class OdeSettings:
     atol: float = 1e-3
     max_steps: int = 32
     fused_bwd: bool = True     # share psi^-1's f-eval with the local VJP
+    obs_times: Optional[Tuple[float, ...]] = None  # observation grid ts
+                               # (>= 2 points); None -> end state only
 
     def validate(self) -> "OdeSettings":
         if self.mode not in ("off", "per_block"):
             raise ValueError(f"bad ode.mode {self.mode!r}")
         if self.method == "mali" and self.solver != "alf":
             raise ValueError("MALI requires the ALF solver")
+        if self.obs_times is not None and len(self.obs_times) < 2:
+            raise ValueError("obs_times needs at least 2 timepoints")
         return self
 
 
 def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],
               settings: OdeSettings) -> Callable[[Pytree, Pytree], Pytree]:
-    """Wrap ``dynamics(params, z, t)`` into ``apply(params, x) -> z(T)``."""
+    """Wrap ``dynamics(params, z, t)`` into ``apply(params, x)``.
+
+    Returns ``z(t1)`` (same structure as ``x``), or — when
+    ``settings.obs_times`` is set — the trajectory pytree with leading axis
+    ``len(obs_times)`` from a single native observation-grid integration.
+    """
     s = settings.validate()
+    ts = None if s.obs_times is None else jnp.asarray(s.obs_times, jnp.float32)
 
     def apply(params: Pytree, x: Pytree) -> Pytree:
-        return odeint(dynamics, params, x, 0.0, s.t1, method=s.method,
+        return odeint(dynamics, params, x, 0.0, s.t1, ts=ts, method=s.method,
                       solver=s.solver, n_steps=s.n_steps, eta=s.eta,
-                      rtol=s.rtol, atol=s.atol, max_steps=s.max_steps)
+                      rtol=s.rtol, atol=s.atol, max_steps=s.max_steps,
+                      fused_bwd=s.fused_bwd)
 
     return apply

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped without hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alf import alf_inverse, alf_step
