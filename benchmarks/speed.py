@@ -1,6 +1,9 @@
 """Paper Fig. 5 (right) analogue: wall-clock per training step for each
 gradient method at equal discretization. Expectation (Table 1 computation
-column): MALI ~ ACA < naive; adjoint pays the reverse re-integration."""
+column): MALI ~ ACA < naive; adjoint pays the reverse re-integration.
+
+A method-swap experiment is a one-argument change on the object API: the
+(gradient, solver) pairs below are the whole configuration matrix."""
 from __future__ import annotations
 
 from typing import List
@@ -8,13 +11,15 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import odeint
+from repro.core import (ACA, ALF, Backsolve, ConstantSteps, HeunEuler, MALI,
+                        Naive, solve)
 
 from .common import Row, mlp_field, mlp_field_init, spirals, time_fn
 
 N_STEPS = 8
-METHOD_SOLVER = (("mali", None), ("naive", "alf"), ("aca", "heun_euler"),
-                 ("adjoint", "heun_euler"))
+CONFIGS = (("mali", MALI(), ALF()), ("naive", Naive(), ALF()),
+           ("aca", ACA(), HeunEuler()),
+           ("adjoint", Backsolve(), HeunEuler()))
 
 
 def run() -> List[Row]:
@@ -22,17 +27,18 @@ def run() -> List[Row]:
     x, y = spirals(1024)
     params = {"field": mlp_field_init(jax.random.PRNGKey(0), d_hidden=64),
               "head": jnp.zeros((2, 2)), "b": jnp.zeros(2)}
+    controller = ConstantSteps(N_STEPS)
 
-    for method, solver in METHOD_SOLVER:
+    for name, gradient, solver in CONFIGS:
         def loss_fn(p):
-            feat = odeint(mlp_field, p["field"], x, 0.0, 1.0, method=method,
-                          solver=solver, n_steps=N_STEPS)
+            feat = solve(mlp_field, p["field"], x, 0.0, 1.0, solver=solver,
+                         controller=controller, gradient=gradient).ys
             logits = feat @ p["head"] + p["b"]
             logp = jax.nn.log_softmax(logits)
             return -jnp.take_along_axis(logp, y[:, None], 1).mean()
 
         step = jax.jit(jax.grad(loss_fn))
         us = time_fn(step, params)
-        rows.append((f"speed/train_step_us/{method}", us,
+        rows.append((f"speed/train_step_us/{name}", us,
                      f"n_steps={N_STEPS} batch=1024 (CPU relative)"))
     return rows

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import odeint
+from repro.core import (ALF, ConstantSteps, MALI, Naive, SaveAt, get_solver,
+                        solve)
 
 HID = 48
 
@@ -88,14 +89,19 @@ KINETIC_REG = 0.5    # Finlay-et-al-style coefficient (the paper uses 0.05
 
 def nll(fp, x, method="mali", n_steps=8, reg=0.0, solver_n=None):
     """-log p(x): integrate x -> base gaussian, exact trace (+ optional
-    kinetic-energy regularizer used during training)."""
+    kinetic-energy regularizer used during training). ``solver_n`` swaps in
+    a different (solver, n_steps) re-discretization at eval time — a
+    one-argument change on the object API."""
     state0 = (x, jnp.zeros(x.shape[:-1]), jnp.zeros(x.shape[:-1]))
-    solver = None
+    solver = ALF()
     if solver_n is not None:
-        solver, n_steps = solver_n
-    zT, logdet, kinetic = odeint(aug_field_exact, fp, state0, 0.0, 1.0,
-                                 method=method, solver=solver,
-                                 n_steps=n_steps)
+        name, n_steps = solver_n
+        solver = get_solver(name)
+    gradient = MALI() if method == "mali" else Naive()
+    zT, logdet, kinetic = solve(aug_field_exact, fp, state0, 0.0, 1.0,
+                                solver=solver,
+                                controller=ConstantSteps(n_steps),
+                                gradient=gradient).ys
     logp_base = -0.5 * jnp.sum(zT ** 2, -1) - math.log(2 * math.pi)
     return -(logp_base + logdet).mean() + reg * kinetic.mean()
 
@@ -156,9 +162,11 @@ def main():
     zs = jnp.asarray(np.random.default_rng(2).standard_normal((8, 2)),
                      jnp.float32)
     flow_ts = jnp.linspace(1.0, 0.0, 5)
-    traj, _, _ = odeint(aug_field_exact, fp,
-                        (zs, jnp.zeros(8), jnp.zeros(8)),
-                        ts=flow_ts, method="mali", n_steps=2)
+    traj, _, _ = solve(aug_field_exact, fp,
+                       (zs, jnp.zeros(8), jnp.zeros(8)),
+                       solver=ALF(), controller=ConstantSteps(2),
+                       gradient=MALI(),
+                       saveat=SaveAt(ts=flow_ts)).ys
     assert traj.shape == (5, 8, 2)
     for t, snap in zip(np.asarray(flow_ts), np.asarray(traj)):
         print(f"flow t={t:.2f} sample[0]={snap[0].round(2).tolist()}")

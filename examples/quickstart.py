@@ -1,9 +1,11 @@
-"""Quickstart: the MALI integrator in 60 lines.
+"""Quickstart: the MALI integrator in ~70 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Integrate an ODE with the public `odeint` facade.
-2. Take gradients through it with each method (Table 1 of the paper).
+1. Integrate an ODE with the composable `solve()` API
+   (solver x step-controller x gradient-method x saveat -> Solution).
+2. Take gradients through it with each method (Table 1 of the paper) —
+   a method swap is a one-argument change.
 3. Show MALI's two properties: constant memory and reverse accuracy.
 """
 import math
@@ -11,7 +13,9 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import odeint
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, Dopri5, HeunEuler, MALI, Naive,
+                        SaveAt, odeint, solve)
 
 
 # dz/dt = alpha * z  — the paper's Sec 4.1 toy with analytic solution.
@@ -24,22 +28,40 @@ z0 = jnp.float32(1.3)
 T = 1.0
 
 # ---- 1. forward integration --------------------------------------------
-zT = odeint(f, params, z0, 0.0, T, method="mali", n_steps=16)
-print(f"z(T) numeric {float(zT):.6f} vs analytic "
+sol = solve(f, params, z0, 0.0, T, solver=ALF(eta=1.0),
+            controller=ConstantSteps(16), gradient=MALI())
+print(f"z(T) numeric {float(sol.ys):.6f} vs analytic "
       f"{1.3 * math.exp(0.5 * T):.6f}")
+print(f"stats: {int(sol.stats.n_accepted)} steps, "
+      f"{int(sol.stats.n_fevals)} f-evals, "
+      f"{sol.stats.residual_bytes} residual bytes")
+
+# adaptive stepping + the whole trajectory is a SaveAt/controller swap:
+traj = solve(f, params, z0, solver=ALF(),
+             controller=AdaptiveController(rtol=1e-4, atol=1e-5),
+             gradient=MALI(), saveat=SaveAt(ts=jnp.linspace(0, T, 5)))
+print("trajectory", [f"{v:.4f}" for v in traj.ys])
+
+# the legacy string facade builds exactly these objects:
+assert float(odeint(f, params, z0, 0.0, T, method="mali",
+                    n_steps=16)) == float(sol.ys)
 
 # ---- 2. gradients through the integrator, all four methods --------------
 exact_dalpha = 2 * T * 1.3 ** 2 * math.exp(2 * 0.5 * T)
 
+CONFIGS = (("mali", MALI(), ALF()), ("naive", Naive(), ALF()),
+           ("aca", ACA(), HeunEuler()), ("adjoint", Backsolve(), Dopri5()))
 
-def loss(p, z, method):
-    return odeint(f, p, z, 0.0, T, method=method, n_steps=16) ** 2
+
+def loss(p, z, gradient, solver):
+    return solve(f, p, z, 0.0, T, solver=solver,
+                 controller=ConstantSteps(16), gradient=gradient).ys ** 2
 
 
-for method in ("mali", "naive", "aca", "adjoint"):
-    g = jax.grad(loss)(params, z0, method)
+for name, gradient, solver in CONFIGS:
+    g = jax.grad(loss)(params, z0, gradient, solver)
     err = abs(float(g["alpha"]) - exact_dalpha)
-    print(f"{method:8s} dL/dalpha = {float(g['alpha']):.5f} "
+    print(f"{name:8s} dL/dalpha = {float(g['alpha']):.5f} "
           f"(analytic {exact_dalpha:.5f}, err {err:.2e})")
 
 # ---- 3a. constant memory: residual bytes flat in n_steps ----------------
@@ -50,27 +72,25 @@ def big_f(p, z, t):
     return jnp.tanh(p["w"] * z)
 
 
-def big_loss(p, z, method, n):
-    return jnp.sum(odeint(big_f, p, z, 0.0, 1.0, method=method,
-                          solver="alf" if method == "naive" else None,
-                          n_steps=n) ** 2)
+def big_loss(p, z, gradient, n):
+    return jnp.sum(solve(big_f, p, z, 0.0, 1.0, solver=ALF(),
+                         controller=ConstantSteps(n),
+                         gradient=gradient).ys ** 2)
 
 
-for method in ("mali", "naive"):
+for name, gradient in (("mali", MALI()), ("naive", Naive())):
     sizes = []
     for n in (8, 64):
         c = jax.jit(jax.grad(big_loss, argnums=0),
                     static_argnums=(2, 3)).lower(
-            big, jnp.ones((65536,)), method, n).compile()
+            big, jnp.ones((65536,)), gradient, n).compile()
         sizes.append(c.memory_analysis().temp_size_in_bytes)
-    print(f"{method:8s} backward temp bytes: n=8 -> {sizes[0]:,}  "
+    print(f"{name:8s} backward temp bytes: n=8 -> {sizes[0]:,}  "
           f"n=64 -> {sizes[1]:,}  (x{sizes[1] / sizes[0]:.1f})")
 
 # ---- 3b. reverse accuracy: MALI == backprop through its own forward -----
-g_mali = jax.grad(loss)(params, z0, "mali")
-g_naive = jax.grad(lambda p, z: odeint(f, p, z, 0.0, T, method="naive",
-                                       solver="alf", n_steps=16) ** 2)(
-    params, z0)
+g_mali = jax.grad(loss)(params, z0, MALI(), ALF())
+g_naive = jax.grad(loss)(params, z0, Naive(), ALF())
 rel = abs(float(g_mali["alpha"]) - float(g_naive["alpha"])) / abs(
     float(g_naive["alpha"]))
 print(f"reverse-accuracy invariant |mali-naive|/|naive| = {rel:.2e} "

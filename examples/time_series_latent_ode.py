@@ -14,7 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import odeint
+from repro.core import (ACA, ALF, Backsolve, ConstantSteps, Dopri5,
+                        HeunEuler, MALI, Naive, SaveAt, solve)
+
+METHODS = {"mali": (MALI(), ALF()), "naive": (Naive(), ALF()),
+           "aca": (ACA(), HeunEuler()), "adjoint": (Backsolve(), Dopri5())}
 
 LATENT = 8
 OBS = 2
@@ -73,11 +77,14 @@ def decode(params, z):
 
 def rollout(params, z0, ts, method="mali"):
     """Integrate latent state to every observation time in ONE native-grid
-    odeint call: the observation grid is threaded through the integrator's
-    single compiled scan (no Python-side interval chaining, and for MALI the
-    backward residuals stay at the per-observation (z, v) pairs)."""
-    return odeint(latent_field, params["f"], z0, ts=ts, method=method,
-                  n_steps=2)                    # [T, ..., LATENT]
+    SaveAt(ts=...) solve: the observation grid is threaded through the
+    integrator's single compiled scan (no Python-side interval chaining, and
+    for MALI the backward residuals stay at the per-observation (z, v)
+    pairs). Swapping the gradient method is a one-argument change."""
+    gradient, solver = METHODS[method]
+    return solve(latent_field, params["f"], z0, solver=solver,
+                 controller=ConstantSteps(2), gradient=gradient,
+                 saveat=SaveAt(ts=ts)).ys   # [T, ..., LATENT]
 
 
 def main():

@@ -1,18 +1,49 @@
-"""Core MALI / Neural-ODE integrator library (the paper's contribution)."""
+"""Core MALI / Neural-ODE integrator library (the paper's contribution).
+
+Two API layers:
+
+* the composable object API — :func:`solve` with
+  Solver (:class:`ALF`, ``Dopri5()``, ...) x StepController
+  (:class:`ConstantSteps`, :class:`AdaptiveController`) x GradientMethod
+  (:class:`MALI`, :class:`Naive`, :class:`ACA`, :class:`Backsolve`) x
+  :class:`SaveAt`, returning a :class:`Solution` with populated
+  :class:`Stats`;
+* the legacy string-keyed :func:`odeint` facade (a thin shim over the
+  object API, kept behavior-preserving).
+"""
 from .alf import (alf_inverse, alf_step, alf_step_with_error, init_velocity,
                   tree_add, tree_scale, tree_sub, tree_zeros_like)
 from .api import (METHODS, mali_forward_stats, odeint, odeint_aca,
                   odeint_adjoint, odeint_mali, odeint_naive)
 from .integrate import (as_time_grid, integrate_adaptive_grid,
-                        integrate_fixed_grid)
+                        integrate_fixed_grid, integrate_grid, integrate_span)
+from .interface import GradientMethod, RunStats, SaveAt, Solution, Stats
 from .ode_block import OdeSettings, ode_block
-from .solvers import SOLVERS, get_solver
+from .solve import solve
+from .aca import ACA
+from .adjoint import Adjoint, Backsolve
+from .mali import MALI
+from .naive import Naive
+from .solvers import (ALF, SOLVERS, Bosh3, ButcherTableau, Dopri5, Euler,
+                      HeunEuler, Midpoint, Rk4, RungeKutta, Solver,
+                      get_solver)
+from .stepsize import AdaptiveController, ConstantSteps, StepController
 
 __all__ = [
+    # ALF primitives
     "alf_step", "alf_inverse", "alf_step_with_error", "init_velocity",
+    # composable API
+    "solve", "Solution", "SaveAt", "Stats", "RunStats",
+    "GradientMethod", "MALI", "Naive", "ACA", "Backsolve", "Adjoint",
+    "Solver", "RungeKutta", "ALF", "ButcherTableau",
+    "Euler", "HeunEuler", "Midpoint", "Bosh3", "Rk4", "Dopri5",
+    "StepController", "ConstantSteps", "AdaptiveController",
+    # legacy facade
     "odeint", "odeint_mali", "odeint_naive", "odeint_aca", "odeint_adjoint",
     "mali_forward_stats", "METHODS", "SOLVERS", "get_solver",
     "OdeSettings", "ode_block",
-    "as_time_grid", "integrate_fixed_grid", "integrate_adaptive_grid",
+    # drivers / tree utils
+    "as_time_grid", "integrate_grid", "integrate_span",
+    "integrate_fixed_grid", "integrate_adaptive_grid",
     "tree_add", "tree_sub", "tree_scale", "tree_zeros_like",
 ]

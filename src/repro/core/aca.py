@@ -8,26 +8,32 @@ method MALI matches in gradient quality while dropping the O(N_t) term.
 
 Like MALI, ACA is built around an observation grid ``ts``: a single scan
 whose carry crosses segment boundaries, checkpointing per-segment step start
-states and emitting z at every requested ``ts[k]``. The backward sweep walks
-the segments in reverse, injecting the trajectory cotangent g[k] at each
-observation. The scalar path is the length-1 grid [t0, t1].
+states and emitting z at every requested ``ts[k]``. Fixed and adaptive step
+control share one custom_vjp — the static
+:class:`~repro.core.stepsize.StepController` in the config picks the driver
+path, and the backward sweep masks over the recorded steps either way. The
+scalar path is the length-1 grid [t0, t1].
+
+:class:`ACA` is this module's :class:`~repro.core.interface.GradientMethod`;
+it accepts any Runge-Kutta solver (the augmented-state ALF solver belongs to
+MALI).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .alf import tree_add, tree_zeros_like
-from .integrate import (as_time_grid, fixed_grid_times,
-                        integrate_adaptive_grid, prepend_row,
-                        reverse_masked_scan, reverse_segment_sweep,
-                        scalar_time_grid, segment_pairs)
-from .solvers import ButcherTableau, get_solver
-from .stepsize import error_ratio
+from .integrate import (as_time_grid, integrate_grid, reverse_masked_scan,
+                        reverse_segment_sweep, scalar_time_grid)
+from .interface import (GradientMethod, RunStats, make_run_stats,
+                        state_nbytes)
+from .solvers import HeunEuler, RungeKutta, get_solver
+from .stepsize import StepController, controller_from_kwargs
 
 _tm = jax.tree_util.tree_map
 
@@ -36,63 +42,45 @@ Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 
 class AcaConfig(NamedTuple):
+    """Static (hashable) configuration of the ACA custom_vjp."""
     f: Dynamics
-    solver: ButcherTableau
-    n_steps: int
-    rtol: float
-    atol: float
-    max_steps: int
+    solver: RungeKutta
+    controller: StepController
+
+
+def _aca_forward(cfg: AcaConfig, params, z0, ts):
+    trial = cfg.solver.trial_fn(cfg.f, params, cfg.controller)
+    return integrate_grid(trial, z0, ts, controller=cfg.controller,
+                          order=cfg.solver.order, record_states=True)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _aca_grid(cfg: AcaConfig, params: Pytree, z0: Pytree,
-              ts: jax.Array) -> Pytree:
-    z_traj, _ = _aca_grid_fwd(cfg, params, z0, ts)
-    return z_traj
+              ts: jax.Array) -> Tuple[Pytree, RunStats]:
+    res = _aca_forward(cfg, params, z0, ts)
+    return res.traj, make_run_stats(res.n_accepted, res.n_trials,
+                                    cfg.solver.stages)
 
 
 def _aca_grid_fwd(cfg, params, z0, ts):
-    sol = cfg.solver
-
-    if cfg.n_steps > 0:
-        def seg(z, pair):
-            step_ts, h = fixed_grid_times(pair[0], pair[1], cfg.n_steps)
-
-            def body(zz, t):
-                z1, _ = sol.step(cfg.f, params, zz, t, h)
-                return z1, zz  # checkpoint the step's start state
-
-            z_end, ckpts = lax.scan(body, z, step_ts)
-            hs = jnp.full((cfg.n_steps,), h, step_ts.dtype)
-            return z_end, (z_end, step_ts, hs,
-                           jnp.asarray(cfg.n_steps, jnp.int32), ckpts)
-
-        zT, (tail, seg_ts, seg_hs, seg_acc, seg_ckpts) = lax.scan(
-            seg, z0, segment_pairs(ts))
-        return prepend_row(z0, tail), (params, seg_ts, seg_hs, seg_acc,
-                                       seg_ckpts, ts)
-
-    def trial(z, t, h):
-        z1, err = sol.step(cfg.f, params, z, t, h)
-        return z1, error_ratio(err, z, z1, cfg.rtol, cfg.atol)
-
-    out = integrate_adaptive_grid(trial, z0, ts, order=sol.order,
-                                  rtol=cfg.rtol, atol=cfg.atol,
-                                  max_steps=cfg.max_steps, record_states=True)
-    return out.traj, (params, out.ts, out.hs, out.n_accepted,
-                      out.state_traj, ts)
+    res = _aca_forward(cfg, params, z0, ts)
+    out = (res.traj, make_run_stats(res.n_accepted, res.n_trials,
+                                    cfg.solver.stages))
+    # Residuals: the checkpointed per-step start states (the paper's O(N_t)
+    # term) + the recorded (t_i, h_i) replay script.
+    return out, (params, res.ts, res.hs, res.n_accepted, res.state_traj, ts)
 
 
 def _aca_grid_bwd(cfg, res, g):
+    g_traj = g[0]  # RunStats cotangents (g[1]) are zero/float0 — ignored.
     params, seg_ts, seg_hs, seg_acc, seg_ckpts, ts = res
-    sol = cfg.solver
-    max_steps = cfg.n_steps if cfg.n_steps > 0 else cfg.max_steps
+    tableau = cfg.solver.tableau
 
     def step_body(carry, t, h, z_i):
         a_z, g_p = carry
 
         def step_fn(p, z):
-            z1, _ = sol.step(cfg.f, p, z, t, h)
+            z1, _ = tableau.step(cfg.f, p, z, t, h)
             return z1
 
         _, vjp_fn = jax.vjp(step_fn, params, z_i)
@@ -104,31 +92,57 @@ def _aca_grid_bwd(cfg, res, g):
         ts_k, hs_k, n_k, ckpts_k = xs_k
         a_z = tree_add(a_z, g_k1)
         a_z, g_p = reverse_masked_scan(step_body, (a_z, g_p), ts_k, hs_k,
-                                       n_k, max_steps, extras=ckpts_k)
+                                       n_k, cfg.controller.step_bound,
+                                       extras=ckpts_k)
         return (a_z, g_p)
 
-    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g)),
+    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g_traj)),
               tree_zeros_like(params))
     a_z, g_params = reverse_segment_sweep(
-        seg, carry0, g, (seg_ts, seg_hs, seg_acc, seg_ckpts))
+        seg, carry0, g_traj, (seg_ts, seg_hs, seg_acc, seg_ckpts))
     return g_params, a_z, jnp.zeros_like(ts)
 
 
 _aca_grid.defvjp(_aca_grid_fwd, _aca_grid_bwd)
 
 
+@dataclasses.dataclass(frozen=True)
+class ACA(GradientMethod):
+    """Adaptive Checkpoint Adjoint (Table 1 'ACA' row): checkpoint every
+    accepted step, re-play each under a local VJP in the backward sweep."""
+
+    name = "aca"
+
+    def default_solver(self) -> RungeKutta:
+        return HeunEuler()
+
+    def validate(self, solver, controller) -> None:
+        if not isinstance(solver, RungeKutta):
+            raise ValueError(
+                "ACA supports Runge-Kutta solvers; use gradient=MALI() for "
+                f"the ALF solver (got {getattr(solver, 'name', solver)!r})")
+        super().validate(solver, controller)
+
+    def integrate(self, f, params, z0, ts, solver, controller):
+        cfg = AcaConfig(f, solver, controller)
+        traj, stats = _aca_grid(cfg, params, z0, ts)
+        return traj, stats
+
+    def residual_bytes(self, z0, n_obs, solver, controller) -> int:
+        # Checkpointed step-start states per segment + the observation traj.
+        return ((n_obs - 1) * controller.step_bound + n_obs) * state_nbytes(z0)
+
+
 def odeint_aca(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-               ts=None, solver: str = "heun_euler", n_steps: int = 0,
+               ts=None, solver="heun_euler", n_steps: int = 0,
                rtol: float = 1e-2, atol: float = 1e-3,
                max_steps: int = 64) -> Pytree:
+    """ACA integration (legacy kwargs facade over the object API)."""
     sol = get_solver(solver)
-    if not isinstance(sol, ButcherTableau):
-        raise ValueError("ACA supports Runge-Kutta tableaus; use MALI for ALF")
-    if n_steps == 0 and sol.b_err is None:
-        raise ValueError(f"solver {solver!r} has no embedded error estimate")
-    cfg = AcaConfig(f, sol, int(n_steps), float(rtol), float(atol),
-                    int(max_steps))
+    controller = controller_from_kwargs(n_steps, rtol, atol, max_steps)
+    method = ACA()
+    method.validate(sol, controller)
     scalar = ts is None
     grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
-    traj = _aca_grid(cfg, params, z0, grid)
+    traj, _ = method.integrate(f, params, z0, grid, sol, controller)
     return _tm(lambda b: b[-1], traj) if scalar else traj

@@ -1,7 +1,8 @@
-"""Adjoint method (Chen et al. 2018, torchdiffeq-style) as jax.custom_vjp.
+"""Backsolve adjoint method (Chen et al. 2018, torchdiffeq-style) as
+jax.custom_vjp.
 
-Forward: integrate and keep only z(T) — O(1) memory. Backward: solve the
-*reverse-time* augmented IVP
+Forward: integrate and keep only the per-observation states — O(T) memory.
+Backward: solve the *reverse-time* augmented IVP
 
     d/dt [ z, a, g ] = [ f,  -(df/dz)^T a,  -(df/dtheta)^T a ]
 
@@ -9,24 +10,33 @@ from T down to t0, re-deriving the trajectory numerically. Because the
 reverse-time trajectory is itself a numerical solution, it drifts from the
 forward one (paper Thm 2.1) — this is the inaccuracy MALI removes. We keep
 this implementation as the paper's main baseline.
+
+:class:`Backsolve` is this module's
+:class:`~repro.core.interface.GradientMethod` (alias :data:`Adjoint`); it
+works with any registered solver — including ALF, whose damping rides on the
+:class:`~repro.core.solvers.ALF` solver object — and both step controllers
+(each observation segment restarts the adaptive controller fresh, matching
+torchdiffeq's per-interval behavior).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from jax import lax
 
-from .alf import (alf_step, alf_step_with_error, check_eta, init_velocity,
-                  tree_add, tree_zeros_like)
-from .integrate import (as_time_grid, integrate_adaptive, integrate_fixed,
-                        prepend_row, reverse_segment_sweep, scalar_time_grid,
+from .alf import tree_add, tree_zeros_like
+from .integrate import (as_time_grid, integrate_span, prepend_row,
+                        reverse_segment_sweep, scalar_time_grid,
                         segment_pairs)
-from .solvers import ButcherTableau, get_solver
-from .stepsize import error_ratio
+from .interface import (GradientMethod, RunStats, make_run_stats,
+                        state_nbytes)
+from .solvers import ALF, Dopri5, Solver, get_solver
+from .stepsize import StepController, controller_from_kwargs
 
 _tm = jax.tree_util.tree_map
 
@@ -35,77 +45,48 @@ Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 
 class AdjointConfig(NamedTuple):
+    """Static (hashable) configuration of the Backsolve custom_vjp."""
     f: Dynamics
-    solver: Any             # ButcherTableau or AlfSolverMeta
-    solver_name: str
-    n_steps: int
-    eta: float
-    rtol: float
-    atol: float
-    max_steps: int
+    solver: Solver
+    controller: StepController
 
 
 def _integrate(cfg: AdjointConfig, dyn: Dynamics, params: Pytree,
-               state0: Pytree, t0, t1) -> Pytree:
-    """Forward-integrate ``dyn`` with cfg's solver; not differentiated."""
-    if cfg.solver_name == "alf":
-        v0 = init_velocity(dyn, params, state0, t0)
-
-        if cfg.n_steps > 0:
-            def step(s, t, h):
-                z, v = s
-                return alf_step(dyn, params, z, v, t, h, cfg.eta)
-
-            zT, _ = integrate_fixed(step, (state0, v0), t0, t1, cfg.n_steps)
-            return zT
-
-        def trial(s, t, h):
-            z, v = s
-            z1, v1, err = alf_step_with_error(dyn, params, z, v, t, h, cfg.eta)
-            return (z1, v1), error_ratio(err, z, z1, cfg.rtol, cfg.atol)
-
-        out = integrate_adaptive(trial, (state0, v0), t0, t1, order=2,
-                                 rtol=cfg.rtol, atol=cfg.atol,
-                                 max_steps=cfg.max_steps)
-        return out.state[0]
-
-    sol = cfg.solver
-    assert isinstance(sol, ButcherTableau)
-    if cfg.n_steps > 0:
-        def step(z, t, h):
-            z1, _ = sol.step(dyn, params, z, t, h)
-            return z1
-
-        return integrate_fixed(step, state0, t0, t1, cfg.n_steps)
-
-    def trial(z, t, h):
-        z1, err = sol.step(dyn, params, z, t, h)
-        return z1, error_ratio(err, z, z1, cfg.rtol, cfg.atol)
-
-    out = integrate_adaptive(trial, state0, t0, t1, order=sol.order,
-                             rtol=cfg.rtol, atol=cfg.atol,
-                             max_steps=cfg.max_steps)
-    return out.state
+               state0: Pytree, t0, t1):
+    """Integrate ``dyn`` over one span with cfg's solver/controller; not
+    differentiated. Returns (z_out, n_accepted, n_trials)."""
+    state = cfg.solver.init_state(dyn, params, state0, t0)
+    trial = cfg.solver.trial_fn(dyn, params, cfg.controller)
+    out = integrate_span(trial, state, t0, t1, controller=cfg.controller,
+                         order=cfg.solver.order)
+    return cfg.solver.output(out.state), out.n_accepted, out.n_trials
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _adjoint_grid(cfg: AdjointConfig, params: Pytree, z0: Pytree,
-                  ts: jax.Array) -> Pytree:
-    z_traj, _ = _adjoint_grid_fwd(cfg, params, z0, ts)
-    return z_traj
+                  ts: jax.Array) -> Tuple[Pytree, RunStats]:
+    (z_traj, stats), _ = _adjoint_grid_fwd(cfg, params, z0, ts)
+    return z_traj, stats
 
 
 def _adjoint_grid_fwd(cfg, params, z0, ts):
-    def seg(z, pair):
-        z1 = _integrate(cfg, cfg.f, params, z, pair[0], pair[1])
-        return z1, z1
+    def seg(carry, pair):
+        z, n_acc, n_tr = carry
+        z1, a, t = _integrate(cfg, cfg.f, params, z, pair[0], pair[1])
+        return (z1, n_acc + a, n_tr + t), z1
 
-    _, tail = lax.scan(seg, z0, segment_pairs(ts))
+    zero = jnp.asarray(0, jnp.int32)
+    (_, n_acc, n_tr), tail = lax.scan(seg, (z0, zero, zero),
+                                      segment_pairs(ts))
     z_traj = prepend_row(z0, tail)
-    return z_traj, (params, z_traj, ts)  # O(T) residuals
+    # ALF re-inits v0 = f(z, t) at every observation segment here.
+    init_evals = (ts.shape[0] - 1) if isinstance(cfg.solver, ALF) else 0
+    out = (z_traj, make_run_stats(n_acc, n_tr, cfg.solver.stages, init_evals))
+    return out, (params, z_traj, ts)  # O(T) residuals
 
 
 def _adjoint_grid_bwd(cfg, res, g):
+    g_traj = g[0]  # RunStats cotangents (g[1]) are zero/float0 — ignored.
     params, z_traj, ts = res
 
     def aug_dyn(p, aug, t):
@@ -122,31 +103,55 @@ def _adjoint_grid_bwd(cfg, res, g):
         # observation (torchdiffeq-style) so reverse drift does not compound
         # across segments, and the cotangent g[k+1] is injected into a(t).
         aug0 = (z_k1, tree_add(a_z, g_k1), g_p)
-        _zrec, a_z, g_p = _integrate(cfg, aug_dyn, params, aug0, t1k, t0k)
+        (_zrec, a_z, g_p), _, _ = _integrate(cfg, aug_dyn, params, aug0,
+                                             t1k, t0k)
         return (a_z, g_p)
 
-    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g)),
+    carry0 = (tree_zeros_like(_tm(lambda b: b[0], g_traj)),
               tree_zeros_like(params))
     a_z, g_params = reverse_segment_sweep(
-        seg, carry0, g, (_tm(lambda b: b[1:], z_traj), ts[:-1], ts[1:]))
+        seg, carry0, g_traj, (_tm(lambda b: b[1:], z_traj), ts[:-1], ts[1:]))
     return g_params, a_z, jnp.zeros_like(ts)
 
 
 _adjoint_grid.defvjp(_adjoint_grid_fwd, _adjoint_grid_bwd)
 
 
+@dataclasses.dataclass(frozen=True)
+class Backsolve(GradientMethod):
+    """Reverse-time adjoint (Table 1 'adjoint' row): O(T) forward memory,
+    gradients subject to reverse-integration drift (paper Thm 2.1)."""
+
+    name = "adjoint"
+
+    def default_solver(self) -> Solver:
+        return Dopri5()
+
+    def integrate(self, f, params, z0, ts, solver, controller):
+        cfg = AdjointConfig(f, solver, controller)
+        traj, stats = _adjoint_grid(cfg, params, z0, ts)
+        return traj, stats
+
+    def residual_bytes(self, z0, n_obs, solver, controller) -> int:
+        # Only the per-observation states survive to the backward pass.
+        return n_obs * state_nbytes(z0)
+
+
+Adjoint = Backsolve
+
+
 def odeint_adjoint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-                   ts=None, solver: str = "dopri5", n_steps: int = 0,
+                   ts=None, solver="dopri5", n_steps: int = 0,
                    eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                    max_steps: int = 64) -> Pytree:
+    """Backsolve-adjoint integration (legacy kwargs facade)."""
     sol = get_solver(solver)
-    if solver == "alf":
-        check_eta(eta)
-    elif n_steps == 0 and sol.b_err is None:
-        raise ValueError(f"solver {solver!r} has no embedded error estimate")
-    cfg = AdjointConfig(f, sol, solver, int(n_steps), float(eta), float(rtol),
-                        float(atol), int(max_steps))
+    if isinstance(sol, ALF) and eta != sol.eta:
+        sol = ALF(eta=float(eta))
+    controller = controller_from_kwargs(n_steps, rtol, atol, max_steps)
+    method = Backsolve()
+    method.validate(sol, controller)
     scalar = ts is None
     grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
-    traj = _adjoint_grid(cfg, params, z0, grid)
+    traj, _ = method.integrate(f, params, z0, grid, sol, controller)
     return _tm(lambda b: b[-1], traj) if scalar else traj

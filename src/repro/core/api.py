@@ -1,12 +1,29 @@
-"""Unified odeint facade: method x solver dispatch (paper Table 1 columns)."""
+"""Legacy string-keyed odeint facade over the composable solve() API.
+
+``odeint(method=..., solver=..., n_steps=...)`` predates the object API and
+is kept behavior-preserving: it builds the corresponding
+Solver / StepController / GradientMethod / SaveAt objects and returns
+``Solution.ys`` (see :mod:`repro.core.solve` for the object API and
+``Solution.stats``). New code should call :func:`repro.core.solve.solve`.
+
+Unlike the historical facade, inapplicable kwargs are no longer silently
+dropped: passing ``eta`` to a non-ALF configuration or ``fused_bwd`` to a
+non-MALI method raises, and ``rtol``/``atol``/``max_steps`` alongside a
+fixed ``n_steps > 0`` warns.
+"""
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable
 
-from .aca import odeint_aca
-from .adjoint import odeint_adjoint
-from .mali import mali_forward_stats, odeint_mali
-from .naive import odeint_naive
+from .aca import ACA, odeint_aca
+from .adjoint import Backsolve, odeint_adjoint
+from .interface import SaveAt
+from .mali import MALI, mali_forward_stats, odeint_mali
+from .naive import Naive, odeint_naive
+from .solve import solve
+from .solvers import ALF, get_solver
+from .stepsize import AdaptiveController, ConstantSteps
 
 Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, Any], Pytree]
@@ -21,11 +38,22 @@ _DEFAULT_SOLVER = {
 METHODS = tuple(_DEFAULT_SOLVER)
 
 
+def _gradient_for(method: str, fused_bwd: bool):
+    if method == "mali":
+        return MALI(fused_bwd=fused_bwd)
+    if method == "naive":
+        return Naive()
+    if method == "aca":
+        return ACA()
+    return Backsolve()
+
+
 def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
            ts=None, method: str = "mali", solver: str | None = None,
-           n_steps: int = 0, eta: float = 1.0, rtol: float = 1e-2,
-           atol: float = 1e-3, max_steps: int = 64,
-           fused_bwd: bool = True) -> Pytree:
+           n_steps: int | None = None, eta: float | None = None,
+           rtol: float | None = None, atol: float | None = None,
+           max_steps: int | None = None,
+           fused_bwd: bool | None = None) -> Pytree:
     """Integrate dz/dt = f(params, z, t).
 
     Two output shapes (torchdiffeq-compatible):
@@ -46,8 +74,13 @@ def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     solver: 'alf' | 'euler' | 'heun_euler' | 'midpoint' | 'rk23' | 'rk4' |
             'dopri5'. MALI requires 'alf'.
     n_steps > 0 -> fixed uniform grid (per observation segment);
-            n_steps == 0 -> adaptive (rtol/atol, bounded by max_steps trials
-            per segment).
+            n_steps == 0 (default) -> adaptive (rtol/atol, bounded by
+            max_steps trials per segment); n_steps < 0 -> error.
+
+    Kwargs that do not apply to the selected method/solver raise instead of
+    being silently ignored: ``eta`` is the ALF damping coefficient (any
+    method, ALF solver only) and ``fused_bwd`` is MALI's backward-sharing
+    switch.
 
     Example::
 
@@ -56,25 +89,45 @@ def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     """
     if method not in _DEFAULT_SOLVER:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
-    solver = solver or _DEFAULT_SOLVER[method]
+    solver_name = solver or _DEFAULT_SOLVER[method]
 
-    if method == "mali":
-        if solver != "alf":
-            raise ValueError("MALI is defined for the ALF solver only")
-        return odeint_mali(f, params, z0, t0, t1, ts=ts, n_steps=n_steps,
-                           eta=eta, rtol=rtol, atol=atol, max_steps=max_steps,
-                           fused_bwd=fused_bwd)
-    if method == "naive":
-        return odeint_naive(f, params, z0, t0, t1, ts=ts, solver=solver,
-                            n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
-                            max_steps=max_steps)
-    if method == "aca":
-        return odeint_aca(f, params, z0, t0, t1, ts=ts, solver=solver,
-                          n_steps=n_steps, rtol=rtol, atol=atol,
-                          max_steps=max_steps)
-    return odeint_adjoint(f, params, z0, t0, t1, ts=ts, solver=solver,
-                          n_steps=n_steps, eta=eta, rtol=rtol, atol=atol,
-                          max_steps=max_steps)
+    # Reject silently-inapplicable kwargs (only defaults are filled in).
+    if eta is not None and solver_name != "alf":
+        raise ValueError(
+            f"eta={eta} was passed, but method={method!r} with "
+            f"solver={solver_name!r} ignores it — eta is the ALF damping "
+            "coefficient. Drop it, or pick solver='alf'.")
+    if fused_bwd is not None and method != "mali":
+        raise ValueError(
+            f"fused_bwd={fused_bwd} was passed, but it is MALI's "
+            f"backward-sharing switch; method={method!r} ignores it.")
+    if n_steps is not None and n_steps < 0:
+        raise ValueError(f"n_steps must be >= 0 (0 selects adaptive "
+                         f"control), got {n_steps}")
+    fixed = n_steps is not None and n_steps > 0
+    if fixed:
+        dropped = [kw for kw, v in (("rtol", rtol), ("atol", atol),
+                                    ("max_steps", max_steps))
+                   if v is not None]
+        if dropped:
+            warnings.warn(
+                f"{'/'.join(dropped)} ignored: n_steps={n_steps} selects "
+                "the fixed-step controller", stacklevel=2)
+
+    solver_obj = (ALF(eta=1.0 if eta is None else float(eta))
+                  if solver_name == "alf" else get_solver(solver_name))
+    # Only pass what the caller set — AdaptiveController's dataclass
+    # defaults stay the single source of truth.
+    adaptive_kw = {k: v for k, v in
+                   (("rtol", rtol), ("atol", atol), ("max_steps", max_steps))
+                   if v is not None}
+    controller = (ConstantSteps(int(n_steps)) if fixed else
+                  AdaptiveController(**adaptive_kw))
+    gradient = _gradient_for(method, True if fused_bwd is None else
+                             bool(fused_bwd))
+    saveat = SaveAt() if ts is None else SaveAt(ts=ts)
+    return solve(f, params, z0, t0, t1, solver=solver_obj,
+                 controller=controller, gradient=gradient, saveat=saveat).ys
 
 
 __all__ = ["odeint", "odeint_mali", "odeint_naive", "odeint_aca",

@@ -1,14 +1,35 @@
-"""Shared fixed-step and adaptive-step integration drivers (paper Algo 1).
+"""One controller-parameterized integration driver (paper Algo 1).
 
-Both drivers are pure jittable functions built on ``lax.scan`` so that they
-are usable (a) inside ``jax.custom_vjp`` forwards (MALI/ACA/adjoint) and
+The driver is a pure jittable function built on ``lax.scan`` so that it is
+usable (a) inside ``jax.custom_vjp`` forwards (MALI/ACA/Backsolve) and
 (b) directly under reverse-mode AD (the naive method) — ``lax.while_loop``
 is not reverse-differentiable, a bounded masked scan is.
 
-The adaptive driver performs exactly one trial step per scan iteration
-(accepted or rejected), mirroring the eval accounting of Algo 1: rejected
-trials still cost f-evals, and the step size shrinks on reject / grows on
-accept via the controller in core/stepsize.py.
+Entry points:
+
+* :func:`integrate_grid` — integrate across an observation grid ``ts`` of
+  T timepoints with ONE ``lax.scan`` over the T-1 segments whose carry
+  crosses segment boundaries (state + the adaptive controller's warm-started
+  step proposal). The :class:`~repro.core.stepsize.StepController` object
+  decides everything fixed-vs-adaptive: :class:`ConstantSteps` replays the
+  uniform per-segment sub-grid, :class:`AdaptiveController` runs exactly one
+  trial step per scan iteration (accepted or rejected), mirroring the eval
+  accounting of Algo 1 — rejected trials still cost f-evals.
+* :func:`integrate_span` — single-interval ``t0 -> t1`` variant (used by
+  the Backsolve method's reverse-time re-integration).
+
+Both return uniform bookkeeping (:class:`GridResult` / :class:`SpanResult`):
+the recorded per-segment ``(t_i, h_i)`` of every accepted step — the replay
+script the MALI/ACA backward sweeps mask over — plus accepted/trial counters
+that surface as ``Solution.stats``.
+
+The trial signature is uniform across solvers and controllers::
+
+    trial(state, t, h) -> (state_next, err_ratio)   # err_ratio <= 1 accepts
+
+(solvers close their embedded error estimate over the controller's norm via
+``Solver.trial_fn``; for ``ConstantSteps`` the ratio is constant 0 and the
+estimate is dead code).
 """
 from __future__ import annotations
 
@@ -16,10 +37,11 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from .stepsize import (MAX_FACTOR, MIN_FACTOR, SAFETY, initial_step_size,
-                       next_step_size)
+from .stepsize import (AdaptiveController, ConstantSteps, StepController,
+                       initial_step_size, next_step_size)
 
 _tm = jax.tree_util.tree_map
 
@@ -35,11 +57,19 @@ def tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
 
 
 def as_time_grid(ts) -> jax.Array:
-    """Validate/convert an observation grid: 1-D, at least two timepoints."""
+    """Validate/convert an observation grid: 1-D, at least two timepoints,
+    strictly monotonic (checked when the values are concrete — inside a
+    trace the structural checks still apply)."""
     grid = jnp.asarray(ts, jnp.float32)
     if grid.ndim != 1 or grid.shape[0] < 2:
         raise ValueError("ts must be a 1-D grid of at least 2 timepoints "
                          f"(got shape {grid.shape})")
+    if not isinstance(grid, jax.core.Tracer):
+        diffs = np.diff(np.asarray(grid))
+        if not (np.all(diffs > 0) or np.all(diffs < 0)):
+            raise ValueError(
+                "ts must be strictly monotonic (all increasing or all "
+                f"decreasing); got ts={np.asarray(grid).tolist()}")
     return grid
 
 
@@ -100,26 +130,23 @@ def reverse_segment_sweep(seg_fn: Callable, carry0: Pytree, g: Pytree,
     return (a_z,) + tuple(carry[1:])
 
 
-def integrate_fixed_grid(step: StepFn, state0: Pytree, ts: jax.Array,
-                         n_steps: int) -> Tuple[Pytree, Pytree]:
-    """Integrate across an observation grid ``ts`` (shape ``(T,)``) with
-    ``n_steps`` uniform sub-steps per segment.
+class GridResult(NamedTuple):
+    """Uniform bookkeeping of one observation-grid integration."""
+    state: Pytree            # final state at ts[-1]
+    traj: Pytree             # (T, ...) state at each ts[k]; traj[0] == state0
+    ts: jax.Array            # (T-1, bound) accepted step start times
+    hs: jax.Array            # (T-1, bound) accepted step sizes
+    n_accepted: jax.Array    # (T-1,) int32 accepted steps per segment
+    n_trials: jax.Array      # int32 total trial count (= accepted + rejected)
+    state_traj: Optional[Pytree]  # (T-1, bound, ...) per-step start states
 
-    One ``lax.scan`` over the T-1 segments whose carry crosses segment
-    boundaries (the inner sub-step scan is nested in its body, so the whole
-    grid compiles once — no per-segment retracing). Emits the state at every
-    requested ``ts[k]``; sub-step times use the *identical* arithmetic as
-    :func:`fixed_grid_times` so MALI's backward reconstruction is exact.
 
-    Returns ``(state_T, traj)`` where ``traj`` stacks the state at each
-    ``ts[k]`` along a new leading axis (``traj[0] == state0``).
-    """
-    def seg(state, pair):
-        state = integrate_fixed(step, state, pair[0], pair[1], n_steps)
-        return state, state
-
-    stateT, tail = lax.scan(seg, state0, segment_pairs(ts))
-    return stateT, prepend_row(state0, tail)
+class SpanResult(NamedTuple):
+    """Uniform bookkeeping of one t0 -> t1 integration."""
+    state: Pytree
+    n_accepted: jax.Array    # int32
+    n_trials: jax.Array      # int32
+    h_final: jax.Array       # controller's step proposal at exit (warm start)
 
 
 class AdaptiveResult(NamedTuple):
@@ -191,53 +218,111 @@ def integrate_adaptive(
     return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj, h)
 
 
-class GridAdaptiveResult(NamedTuple):
-    state: Pytree            # final state at ts[-1]
-    traj: Pytree             # (T, ...) state at each ts[k]; traj[0] == state0
-    ts: jax.Array            # (T-1, max_steps) accepted step start times
-    hs: jax.Array            # (T-1, max_steps) accepted step sizes
-    n_accepted: jax.Array    # (T-1,) int32 accepted steps per segment
-    n_evals: jax.Array       # int32 total trial count across all segments
-    state_traj: Optional[Pytree]  # (T-1, max_steps, ...) per-step start states
+def _constant_grid(trial: TrialFn, state0: Pytree, ts: jax.Array, n: int,
+                   record_states: bool) -> GridResult:
+    """ConstantSteps path of :func:`integrate_grid`: a plain per-segment
+    sub-grid scan (every trial accepted), emitting the same bookkeeping as
+    the adaptive path so backward sweeps are controller-agnostic."""
+
+    def seg(state, pair):
+        step_ts, h = fixed_grid_times(pair[0], pair[1], n)
+
+        def body(s, t):
+            s1, _ = trial(s, t, h)
+            return s1, (s if record_states else None)
+
+        state1, ckpts = lax.scan(body, state, step_ts)
+        hs = jnp.broadcast_to(h, (n,))
+        return state1, (state1, step_ts, hs, ckpts)
+
+    stateT, (tail, seg_ts, seg_hs, seg_ck) = lax.scan(
+        seg, state0, segment_pairs(ts))
+    n_seg = seg_ts.shape[0]
+    n_acc = jnp.full((n_seg,), n, jnp.int32)
+    n_trials = jnp.asarray(n_seg * n, jnp.int32)
+    return GridResult(stateT, prepend_row(state0, tail), seg_ts, seg_hs,
+                      n_acc, n_trials, seg_ck if record_states else None)
 
 
-def integrate_adaptive_grid(
-    trial: TrialFn,
-    state0: Pytree,
-    ts: jax.Array,
-    *,
-    order: int,
-    rtol: float,
-    atol: float,
-    max_steps: int,
-    record_states: bool = False,
-) -> GridAdaptiveResult:
-    """Adaptive integration across an observation grid ``ts`` (shape (T,)).
-
-    One ``lax.scan`` over segments whose carry (the integrator state AND the
-    controller's step proposal, warm-starting each segment at the previous
-    segment's converged step size) crosses segment boundaries; each segment
-    runs the bounded adaptive controller with its own ``max_steps`` trial
-    budget. Per-segment step bookkeeping keeps the backward-pass residual set
-    at O(T) scalars + O(T * N_z) states.
-    """
-    h_start = initial_step_size(rtol, atol, ts[1] - ts[0])
+def _adaptive_grid(trial: TrialFn, state0: Pytree, ts: jax.Array,
+                   controller: AdaptiveController, order: int,
+                   record_states: bool) -> GridResult:
+    """AdaptiveController path of :func:`integrate_grid`: per-segment bounded
+    accept/reject loops, with the step proposal warm-started across segment
+    boundaries through the scan carry."""
+    h_start = controller.initial_step(ts[1] - ts[0])
 
     def seg(carry, pair):
         state, n_ev, h_prev = carry
         span = pair[1] - pair[0]
         h0 = jnp.sign(span) * jnp.minimum(jnp.abs(h_prev), jnp.abs(span))
         out = integrate_adaptive(trial, state, pair[0], pair[1], order=order,
-                                 rtol=rtol, atol=atol, max_steps=max_steps,
-                                 h0=h0, record_states=record_states)
+                                 rtol=controller.rtol, atol=controller.atol,
+                                 max_steps=controller.max_steps, h0=h0,
+                                 record_states=record_states)
         ys = (out.state, out.ts, out.hs, out.n_accepted, out.state_traj)
         return (out.state, n_ev + out.n_evals, out.h_final), ys
 
     carry0 = (state0, jnp.asarray(0, jnp.int32), h_start)
     (stateT, n_ev, _), (tail, seg_ts, seg_hs, seg_acc, seg_traj) = lax.scan(
         seg, carry0, segment_pairs(ts))
-    return GridAdaptiveResult(stateT, prepend_row(state0, tail), seg_ts,
-                              seg_hs, seg_acc, n_ev, seg_traj)
+    return GridResult(stateT, prepend_row(state0, tail), seg_ts, seg_hs,
+                      seg_acc, n_ev, seg_traj)
+
+
+def integrate_grid(
+    trial: TrialFn,
+    state0: Pytree,
+    ts: jax.Array,
+    *,
+    controller: StepController,
+    order: int,
+    record_states: bool = False,
+) -> GridResult:
+    """THE grid driver: integrate across an observation grid ``ts`` (shape
+    (T,)) under the given :class:`StepController`.
+
+    One compiled ``lax.scan`` over the T-1 segments whose carry (integrator
+    state, and for adaptive control the warm-started step proposal) crosses
+    segment boundaries. The recorded per-segment (t_i, h_i[, state_i])
+    bookkeeping keeps the backward-pass residual set at O(T * step_bound)
+    scalars + O(T * N_z) states, constant in the solver-step count.
+    """
+    if isinstance(controller, ConstantSteps):
+        return _constant_grid(trial, state0, ts, controller.n, record_states)
+    if isinstance(controller, AdaptiveController):
+        return _adaptive_grid(trial, state0, ts, controller, order,
+                              record_states)
+    raise TypeError(f"unknown step controller {controller!r}")
+
+
+def integrate_span(
+    trial: TrialFn,
+    state0: Pytree,
+    t0: jax.Array,
+    t1: jax.Array,
+    *,
+    controller: StepController,
+    order: int,
+    h0: Optional[jax.Array] = None,
+) -> SpanResult:
+    """Single-interval ``t0 -> t1`` driver (Backsolve's forward segments and
+    reverse-time augmented re-integration)."""
+    if isinstance(controller, ConstantSteps):
+        def step(s, t, h):
+            return trial(s, t, h)[0]
+
+        state = integrate_fixed(step, state0, t0, t1, controller.n)
+        n = jnp.asarray(controller.n, jnp.int32)
+        _, h = fixed_grid_times(jnp.asarray(t0, jnp.float32),
+                                jnp.asarray(t1, jnp.float32), controller.n)
+        return SpanResult(state, n, n, h)
+    if isinstance(controller, AdaptiveController):
+        out = integrate_adaptive(trial, state0, t0, t1, order=order,
+                                 rtol=controller.rtol, atol=controller.atol,
+                                 max_steps=controller.max_steps, h0=h0)
+        return SpanResult(out.state, out.n_accepted, out.n_evals, out.h_final)
+    raise TypeError(f"unknown step controller {controller!r}")
 
 
 def reverse_masked_scan(body: Callable, carry0: Pytree, ts: jax.Array,
@@ -263,3 +348,22 @@ def reverse_masked_scan(body: Callable, carry0: Pytree, ts: jax.Array,
 
     carry, _ = lax.scan(wrapped, carry0, idxs)
     return carry
+
+
+# --- legacy driver names (pre-object API), kept as thin wrappers -----------
+
+def integrate_fixed_grid(step: StepFn, state0: Pytree, ts: jax.Array,
+                         n_steps: int) -> Tuple[Pytree, Pytree]:
+    """Deprecated: use :func:`integrate_grid` with ``ConstantSteps``."""
+    res = _constant_grid(lambda s, t, h: (step(s, t, h), jnp.zeros(())),
+                         state0, ts, n_steps, record_states=False)
+    return res.state, res.traj
+
+
+def integrate_adaptive_grid(trial: TrialFn, state0: Pytree, ts: jax.Array, *,
+                            order: int, rtol: float, atol: float,
+                            max_steps: int,
+                            record_states: bool = False) -> GridResult:
+    """Deprecated: use :func:`integrate_grid` with ``AdaptiveController``."""
+    ctrl = AdaptiveController(rtol=rtol, atol=atol, max_steps=max_steps)
+    return _adaptive_grid(trial, state0, ts, ctrl, order, record_states)

@@ -1,0 +1,163 @@
+"""Shared interface types of the composable solve() API.
+
+This module is the hub the gradient-method modules (mali/naive/aca/adjoint)
+implement against, so it deliberately depends on nothing but the solver and
+controller axes:
+
+* :class:`GradientMethod` — the gradient-estimation axis of paper Table 1.
+  Each method validates its solver/controller compatibility (MALI => ALF),
+  owns its ``jax.custom_vjp`` wiring, and integrates over an observation
+  grid through one uniform entry point.
+* :class:`RunStats` — the raw accepted/trial counters a method's forward
+  pass emits (threaded through the custom_vjp primal as integer outputs
+  whose cotangents are ignored).
+* :class:`Stats` / :class:`Solution` / :class:`SaveAt` — the user-facing
+  result types of :func:`repro.core.solve.solve`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+class RunStats(NamedTuple):
+    """Step accounting from one forward integration (paper Algo 1's
+    accept/reject loop; for fixed-step control rejected == 0).
+
+    Derived counters are computed *inside* each gradient method's
+    custom_vjp primal (see :func:`make_run_stats`): the integer outputs of
+    a custom_vjp carry instantiated float0 tangents under vmap-of-grad, so
+    arithmetic on them outside the primal would crash jvp tracing.
+    """
+    n_accepted: jax.Array   # int32: accepted solver steps, all segments
+    n_rejected: jax.Array   # int32: rejected trial steps
+    n_fevals: jax.Array     # int32: forward dynamics evaluations
+
+
+def make_run_stats(n_accepted: jax.Array, n_trials: jax.Array, stages: int,
+                   init_evals: int = 0) -> RunStats:
+    """Fold raw driver counters into :class:`RunStats`.
+
+    ``n_accepted`` may be per-segment (summed here); ``stages`` is the
+    solver's f-evals per trial step; ``init_evals`` covers state-init
+    evaluations (ALF's ``v0 = f(z0, t0)``).
+    """
+    n_acc = jnp.sum(n_accepted).astype(jnp.int32)
+    n_tr = jnp.asarray(n_trials, jnp.int32)
+    return RunStats(n_acc, n_tr - n_acc, n_tr * stages + init_evals)
+
+
+class Stats(NamedTuple):
+    """``Solution.stats``: the paper's Table 1 accounting for one solve.
+
+    ``n_fevals`` counts *forward-pass* dynamics evaluations (trials x the
+    solver's stage count, + 1 for ALF's ``v0 = f(z0, t0)`` init); the
+    backward pass of each method adds its own Table-1 cost on top.
+    ``residual_bytes`` is the analytic backward-residual footprint of the
+    chosen gradient method (MALI: the per-observation (z, v) pairs —
+    O(T * N_z), constant in step count; ACA/naive grow with the step
+    budget), computed from static shapes — not a measurement.
+    """
+    n_accepted: jax.Array   # int32
+    n_rejected: jax.Array   # int32
+    n_fevals: jax.Array     # int32
+    n_segments: int         # static: observation segments (T - 1)
+    residual_bytes: int     # static: analytic residual-memory estimate
+
+
+class Solution(NamedTuple):
+    """Result of :func:`repro.core.solve.solve` (a pytree — jit/vmap-safe).
+
+    ``ys``/``ts`` shape depends on the ``SaveAt`` mode: the end state and
+    scalar ``t1`` (default), the (T, ...) trajectory over ``SaveAt.ts``, or
+    the padded dense per-step record for ``SaveAt(steps=True)`` (rows
+    ``0 .. stats.n_accepted`` are live: step-start states then the final
+    state; later rows are zero padding).
+    """
+    ys: Pytree
+    ts: jax.Array
+    stats: Stats
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SaveAt:
+    """What to save (diffrax-style). One mode applies per solve:
+
+    * ``ts=<1-D grid>`` — the trajectory at every requested timepoint
+      (the observation-grid path; ``ys[0] == z0``);
+    * ``steps=True`` — dense per-step output: every accepted solver step's
+      start state plus the final state, with the actual step times in
+      ``Solution.ts``. Dense output pins every intermediate state by
+      definition, so it is integrated with direct backpropagation through
+      the recorded step sequence (the memory advantage of
+      MALI/ACA/Backsolve does not exist in this mode);
+    * otherwise ``t1`` — only the final state ``z(t1)`` (the default;
+      ``t1`` is the fallback mode, so passing ``ts=grid`` overrides it and
+      ``SaveAt(ts=grid)`` needs no ``t1=False``).
+
+    ``ts`` and ``steps`` are mutually exclusive.
+    """
+    t1: bool = True
+    ts: Optional[Any] = None
+    steps: bool = False
+
+    def __post_init__(self):
+        if self.steps and self.ts is not None:
+            raise ValueError("SaveAt: pass either ts=<grid> or steps=True, "
+                             "not both")
+
+
+class GradientMethod:
+    """Base of the gradient-estimation axis (paper Table 1 rows).
+
+    Subclasses are frozen dataclasses (hashable, so they can sit in static
+    jit arguments) implementing:
+
+    * ``default_solver()`` — the paper's pairing (MALI/Naive -> ALF,
+      ACA -> Heun-Euler, Backsolve -> Dopri5);
+    * ``validate(solver, controller)`` — reject incompatible axes with an
+      actionable error *before* tracing;
+    * ``integrate(f, params, z0, ts, solver, controller)`` — run the
+      observation-grid forward and return ``(traj, RunStats)`` where
+      ``traj`` has leading axis T = len(ts). custom_vjp methods own their
+      VJP wiring here;
+    * ``residual_bytes(z0, n_obs, solver, controller)`` — the analytic
+      backward-residual footprint for ``Stats``.
+    """
+
+    name: str = "?"
+
+    def default_solver(self):
+        raise NotImplementedError
+
+    def validate(self, solver, controller) -> None:
+        if controller.adaptive and not solver.has_error_estimate:
+            raise ValueError(
+                f"solver {solver.name!r} has no embedded error estimate; "
+                "use ConstantSteps(n) with it or pick an embedded pair")
+
+    def integrate(self, f, params, z0: Pytree, ts: jax.Array, solver,
+                  controller) -> Tuple[Pytree, RunStats]:
+        raise NotImplementedError
+
+    def residual_bytes(self, z0: Pytree, n_obs: int, solver,
+                       controller) -> int:
+        return 0
+
+
+def state_nbytes(z0: Pytree) -> int:
+    """Static byte size of one state pytree (shape/dtype only — works on
+    tracers)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(z0):
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", None)
+        itemsize = np.dtype(dtype).itemsize if dtype is not None else 4
+        total += int(np.prod(shape, dtype=np.int64)) * itemsize
+    return total

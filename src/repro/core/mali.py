@@ -8,6 +8,13 @@ per-observation ``(z_k, v_k)`` pairs — O(T * N_z), *constant in the number of
 solver steps*. The scalar ``t0 -> t1`` path is the length-1 grid
 ``ts = [t0, t1]``.
 
+Both step-size policies go through ONE custom_vjp: the static
+:class:`~repro.core.stepsize.StepController` in the config decides whether
+the forward replays a uniform per-segment sub-grid (``ConstantSteps``) or
+runs the bounded accept/reject loop of Algo 1 (``AdaptiveController``); the
+backward sweep is controller-agnostic, masking over the recorded accepted
+(t_i, h_i) of each segment.
+
 Backward: per segment (in reverse), reconstruct the trajectory step-by-step
 with the exact ALF inverse (psi^-1) starting from the stored segment-end
 state, and run one local VJP of psi per accepted step, accumulating the
@@ -17,10 +24,18 @@ observation k. The stepsize *search* (rejected trials) is excluded, so the
 effective computation-graph depth is N_f x N_t (Table 1, MALI column).
 
 Gradients w.r.t. the observation times are not propagated (zeros); the
-framework never differentiates them.
+framework never differentiates them. The forward also emits
+:class:`~repro.core.interface.RunStats` integer counters (the
+``Solution.stats`` feed); their cotangents are ignored.
+
+:class:`MALI` is this module's :class:`~repro.core.interface.GradientMethod`
+— the Table 1 row the paper contributes; it validates solver compatibility
+(MALI is defined for the ALF solver only) and carries the ``fused_bwd``
+backward-sharing switch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, NamedTuple, Tuple
 
@@ -30,11 +45,12 @@ from jax import lax
 
 from .alf import (alf_inverse, alf_step, alf_step_with_error, check_eta,
                   init_velocity, tree_add, tree_zeros_like)
-from .integrate import (as_time_grid, fixed_grid_times,
-                        integrate_adaptive_grid, integrate_fixed_grid,
-                        reverse_masked_scan, reverse_segment_sweep,
-                        scalar_time_grid)
-from .stepsize import error_ratio
+from .integrate import (as_time_grid, integrate_grid, reverse_masked_scan,
+                        reverse_segment_sweep, scalar_time_grid)
+from .interface import GradientMethod, RunStats, make_run_stats, state_nbytes
+from .solvers import ALF
+from .stepsize import (AdaptiveController, StepController,
+                       controller_from_kwargs)
 
 _tm = jax.tree_util.tree_map
 
@@ -45,11 +61,8 @@ Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 class MaliConfig(NamedTuple):
     """Static (hashable) integrator configuration."""
     f: Dynamics
-    n_steps: int            # >0: fixed grid; 0: adaptive
     eta: float
-    rtol: float
-    atol: float
-    max_steps: int
+    controller: StepController
     fused_bwd: bool = True  # share the inverse's f-eval with the local VJP
 
 
@@ -130,105 +143,43 @@ def _close_v0_vjp(f, params, z0, t0, a_z, a_v, g_params):
 
 
 # ---------------------------------------------------------------------------
-# Fixed-step MALI over an observation grid
+# The (single, controller-parameterized) MALI custom_vjp
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _mali_grid_fixed(cfg: MaliConfig, params: Pytree, z0: Pytree,
-                     ts: jax.Array) -> Pytree:
-    z_traj, _ = _mali_grid_fixed_forward(cfg, params, z0, ts)
-    return z_traj
-
-
-def _mali_grid_fixed_forward(cfg, params, z0, ts):
-    v0 = init_velocity(cfg.f, params, z0, ts[0])
-
-    def step(state, t, h):
-        z, v = state
-        return alf_step(cfg.f, params, z, v, t, h, cfg.eta)
-
-    _, traj = integrate_fixed_grid(step, (z0, v0), ts, cfg.n_steps)
-    return traj  # (z_traj, v_traj), each with leading axis T
-
-
-def _mali_grid_fixed_fwd(cfg, params, z0, ts):
-    z_traj, v_traj = _mali_grid_fixed_forward(cfg, params, z0, ts)
-    # Residuals: the per-observation (z_k, v_k) pairs — O(T * N_z),
-    # constant in n_steps.
-    return z_traj, (params, z_traj, v_traj, ts)
-
-
-def _mali_grid_fixed_bwd(cfg, res, g):
-    params, z_traj, v_traj, ts = res
-
-    def seg(carry, g_k1, xs_k):
-        a_z, a_v, g_p = carry
-        z_k1, v_k1, t0k, t1k = xs_k
-        # The stored segment-end state is the exact forward value: resetting
-        # to it (rather than chaining psi^-1 across segments) stops float
-        # drift from accumulating across observations.
-        a_z = tree_add(a_z, g_k1)
-        step_ts, h = fixed_grid_times(t0k, t1k, cfg.n_steps)
-
-        def body(c, t_start):
-            z_i, v_i, az, av, gp = c
-            z_prev, v_prev, dz, dv, dp = _step_backward(
-                cfg, params, z_i, v_i, t_start, h, az, av)
-            return (z_prev, v_prev, dz, dv, tree_add(gp, dp)), None
-
-        (_, _, a_z, a_v, g_p), _ = lax.scan(
-            body, (z_k1, v_k1, a_z, a_v, g_p), step_ts, reverse=True)
-        return (a_z, a_v, g_p)
-
-    z0 = _traj_row(z_traj, 0)
-    carry0 = (tree_zeros_like(z0), tree_zeros_like(_traj_row(v_traj, 0)),
-              tree_zeros_like(params))
-    extras = (_tm(lambda b: b[1:], z_traj), _tm(lambda b: b[1:], v_traj),
-              ts[:-1], ts[1:])
-    a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g, extras)
-
-    g_params, a_z = _close_v0_vjp(cfg.f, params, z0, ts[0], a_z, a_v, g_params)
-    return g_params, a_z, jnp.zeros_like(ts)
-
-
-_mali_grid_fixed.defvjp(_mali_grid_fixed_fwd, _mali_grid_fixed_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Adaptive-step MALI over an observation grid
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _mali_grid_adaptive(cfg: MaliConfig, params: Pytree, z0: Pytree,
-                        ts: jax.Array) -> Pytree:
-    out = _mali_grid_adaptive_forward(cfg, params, z0, ts)
-    return out.traj[0]
-
-
-def _mali_grid_adaptive_forward(cfg, params, z0, ts):
+def _mali_forward(cfg: MaliConfig, params, z0, ts):
+    """Shared forward: one grid integration of the augmented (z, v) state
+    under cfg's controller. Returns the full GridResult bookkeeping."""
     v0 = init_velocity(cfg.f, params, z0, ts[0])
 
     def trial(state, t, h):
         z, v = state
         z1, v1, err = alf_step_with_error(cfg.f, params, z, v, t, h, cfg.eta)
-        ratio = error_ratio(err, z, z1, cfg.rtol, cfg.atol)
-        return (z1, v1), ratio
+        return (z1, v1), cfg.controller.error_ratio(err, z, z1)
 
-    return integrate_adaptive_grid(trial, (z0, v0), ts, order=2,
-                                   rtol=cfg.rtol, atol=cfg.atol,
-                                   max_steps=cfg.max_steps)
+    return integrate_grid(trial, (z0, v0), ts, controller=cfg.controller,
+                          order=2)
 
 
-def _mali_grid_adaptive_fwd(cfg, params, z0, ts):
-    out = _mali_grid_adaptive_forward(cfg, params, z0, ts)
-    z_traj, v_traj = out.traj
-    # Residuals: per-observation (z_k, v_k) + O(T * max_steps) scalars (the
-    # accepted h_i / t_i per segment) — still constant in solver-step count.
-    res = (params, z_traj, v_traj, out.ts, out.hs, out.n_accepted, ts)
-    return z_traj, res
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mali_grid(cfg: MaliConfig, params: Pytree, z0: Pytree,
+               ts: jax.Array) -> Tuple[Pytree, RunStats]:
+    res = _mali_forward(cfg, params, z0, ts)
+    z_traj, _ = res.traj
+    return z_traj, make_run_stats(res.n_accepted, res.n_trials, 1, 1)
 
 
-def _mali_grid_adaptive_bwd(cfg, res, g):
+def _mali_grid_fwd(cfg, params, z0, ts):
+    res = _mali_forward(cfg, params, z0, ts)
+    z_traj, v_traj = res.traj
+    # Residuals: the per-observation (z_k, v_k) pairs — O(T * N_z), constant
+    # in the solver-step count — plus the O(T * step_bound) recorded (t, h)
+    # scalars the backward sweep replays.
+    out = (z_traj, make_run_stats(res.n_accepted, res.n_trials, 1, 1))
+    return out, (params, z_traj, v_traj, res.ts, res.hs, res.n_accepted, ts)
+
+
+def _mali_grid_bwd(cfg, res, g):
+    g_traj = g[0]  # RunStats cotangents (g[1]) are zero/float0 — ignored.
     params, z_traj, v_traj, seg_ts, seg_hs, seg_acc, ts = res
 
     def step_body(c, t_start, h):
@@ -240,10 +191,13 @@ def _mali_grid_adaptive_bwd(cfg, res, g):
     def seg(carry, g_k1, xs_k):
         a_z, a_v, g_p = carry
         z_k1, v_k1, ts_k, hs_k, n_k = xs_k
+        # The stored segment-end state is the exact forward value: resetting
+        # to it (rather than chaining psi^-1 across segments) stops float
+        # drift from accumulating across observations.
         a_z = tree_add(a_z, g_k1)
         carry_k = (z_k1, v_k1, a_z, a_v, g_p)
         _, _, a_z, a_v, g_p = reverse_masked_scan(
-            step_body, carry_k, ts_k, hs_k, n_k, cfg.max_steps)
+            step_body, carry_k, ts_k, hs_k, n_k, cfg.controller.step_bound)
         return (a_z, a_v, g_p)
 
     z0 = _traj_row(z_traj, 0)
@@ -251,52 +205,86 @@ def _mali_grid_adaptive_bwd(cfg, res, g):
               tree_zeros_like(params))
     extras = (_tm(lambda b: b[1:], z_traj), _tm(lambda b: b[1:], v_traj),
               seg_ts, seg_hs, seg_acc)
-    a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g, extras)
+    a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g_traj, extras)
 
     g_params, a_z = _close_v0_vjp(cfg.f, params, z0, ts[0], a_z, a_v, g_params)
     return g_params, a_z, jnp.zeros_like(ts)
 
 
-_mali_grid_adaptive.defvjp(_mali_grid_adaptive_fwd, _mali_grid_adaptive_bwd)
+_mali_grid.defvjp(_mali_grid_fwd, _mali_grid_bwd)
 
 
 # ---------------------------------------------------------------------------
-# Public API
+# The GradientMethod object + legacy function API
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MALI(GradientMethod):
+    """The paper's method (Algo 4): reconstruct-the-trajectory gradients at
+    O(T * N_z) residual memory, reverse-accurate w.r.t. its own forward
+    discretization. ``fused_bwd`` shares psi^-1's f-eval with the local VJP
+    (3 instead of 4 f-eval-equivalents per backward step)."""
+
+    fused_bwd: bool = True
+
+    name = "mali"
+
+    def default_solver(self) -> ALF:
+        return ALF()
+
+    def validate(self, solver, controller) -> None:
+        if not isinstance(solver, ALF):
+            raise ValueError(
+                "MALI is defined for the ALF solver only (paper Sec 3); got "
+                f"solver {getattr(solver, 'name', solver)!r}. Pass "
+                "solver=ALF(eta=...) or use gradient=Naive()/ACA() for "
+                "Runge-Kutta solvers.")
+
+    def integrate(self, f, params, z0, ts, solver, controller):
+        cfg = MaliConfig(f, solver.eta, controller, self.fused_bwd)
+        traj, stats = _mali_grid(cfg, params, z0, ts)
+        return traj, stats
+
+    def residual_bytes(self, z0, n_obs, solver, controller) -> int:
+        # The per-observation (z_k, v_k) pairs — constant in step count.
+        return 2 * n_obs * state_nbytes(z0)
+
 
 def odeint_mali(f: Dynamics, params: Pytree, z0: Pytree,
                 t0=0.0, t1=1.0, *, ts=None, n_steps: int = 0,
                 eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                 max_steps: int = 64, fused_bwd: bool = True) -> Pytree:
-    """Integrate dz/dt = f(params, z, t) with MALI gradients.
+    """Integrate dz/dt = f(params, z, t) with MALI gradients (legacy kwargs
+    facade over the object API).
 
     Without ``ts``: integrate t0 -> t1 and return z(t1) (internally the
     length-1 observation grid ``[t0, t1]``). With ``ts`` (shape (T,), T >= 2):
     return the trajectory pytree with leading axis T, ``traj[0] == z0``.
 
-    ``n_steps > 0`` selects the fixed uniform grid *per segment* (the paper's
-    large-scale setting, e.g. h=0.25 -> n_steps=4 on [0,1]); ``n_steps == 0``
-    selects the adaptive controller with ``rtol/atol`` and a per-segment
-    ``max_steps`` trial budget.
+    ``n_steps > 0`` selects ``ConstantSteps`` (the paper's large-scale
+    setting, e.g. h=0.25 -> n_steps=4 on [0,1]); ``n_steps == 0`` selects
+    ``AdaptiveController(rtol, atol, max_steps)``.
     """
     check_eta(eta)
-    cfg = MaliConfig(f, int(n_steps), float(eta), float(rtol), float(atol),
-                     int(max_steps), bool(fused_bwd))
+    cfg = MaliConfig(f, float(eta),
+                     controller_from_kwargs(n_steps, rtol, atol, max_steps),
+                     bool(fused_bwd))
     scalar = ts is None
     grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
-    if n_steps > 0:
-        traj = _mali_grid_fixed(cfg, params, z0, grid)
-    else:
-        traj = _mali_grid_adaptive(cfg, params, z0, grid)
+    traj, _ = _mali_grid(cfg, params, z0, grid)
     return _traj_row(traj, -1) if scalar else traj
 
 
 def mali_forward_stats(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0,
                        t1=1.0, *, eta: float = 1.0, rtol: float = 1e-2,
                        atol: float = 1e-3, max_steps: int = 64):
-    """Adaptive forward only, returning (zT, n_accepted, n_evals) for
-    benchmarking the paper's m / N_t accounting."""
+    """Adaptive forward only, returning (zT, n_accepted, n_evals) for the
+    paper's m / N_t accounting. Superseded by ``Solution.stats`` (where
+    n_evals = n_accepted + n_rejected); kept as a compatibility shim."""
     check_eta(eta)
-    cfg = MaliConfig(f, 0, float(eta), float(rtol), float(atol), int(max_steps))
-    out = _mali_grid_adaptive_forward(cfg, params, z0, scalar_time_grid(t0, t1))
-    return out.state[0], jnp.sum(out.n_accepted), out.n_evals
+    cfg = MaliConfig(f, float(eta),
+                     AdaptiveController(float(rtol), float(atol),
+                                        int(max_steps)), True)
+    res = _mali_forward(cfg, params, z0, scalar_time_grid(t0, t1))
+    return res.state[0], jnp.sum(res.n_accepted), res.n_trials
+

@@ -6,24 +6,25 @@ with the number of (trial) steps — including the rejected stepsize-search
 trials in the adaptive case, exactly the paper's characterization (memory
 N_z*N_f*N_t*m, graph depth N_f*N_t*m).
 
-Supports the RK tableaus and the ALF solver (augmented (z, v) state with
-v0 = f(z0, t0)); the latter gives the gradient-equivalence oracle for MALI:
-naive-ALF and MALI must agree to float precision on the same fixed grid —
-both for the end state and for every point of an observation-grid
-trajectory (``ts``), since both run the identical segmented forward.
+Supports every registered solver uniformly through the
+:class:`~repro.core.solvers.Solver` interface (the ALF solver's augmented
+(z, v) state with ``v0 = f(z0, t0)`` included); naive-through-ALF is the
+gradient-equivalence oracle for MALI: both run the identical segmented
+forward, so they must agree to float precision on the same fixed grid —
+for the end state and for every point of an observation-grid trajectory.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from .alf import alf_step, alf_step_with_error, check_eta, init_velocity
-from .integrate import (as_time_grid, integrate_adaptive_grid,
-                        integrate_fixed_grid, scalar_time_grid)
-from .solvers import ButcherTableau, get_solver
-from .stepsize import error_ratio
+from .integrate import as_time_grid, integrate_grid, scalar_time_grid
+from .interface import GradientMethod, make_run_stats, state_nbytes
+from .solvers import ALF, Solver, get_solver
+from .stepsize import controller_from_kwargs
 
 _tm = jax.tree_util.tree_map
 
@@ -31,56 +32,49 @@ Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 
+@dataclasses.dataclass(frozen=True)
+class Naive(GradientMethod):
+    """Direct backprop through the integration loop (Table 1 'naive' row):
+    the memory-hungry oracle every memory-efficient method is checked
+    against."""
+
+    name = "naive"
+
+    def default_solver(self) -> Solver:
+        return ALF()
+
+    def integrate(self, f, params, z0, ts, solver, controller):
+        state0 = solver.init_state(f, params, z0, ts[0])
+        trial = solver.trial_fn(f, params, controller)
+        res = integrate_grid(trial, state0, ts, controller=controller,
+                             order=solver.order)
+        init_evals = 1 if isinstance(solver, ALF) else 0
+        return (solver.output(res.traj),
+                make_run_stats(res.n_accepted, res.n_trials, solver.stages,
+                               init_evals))
+
+    def residual_bytes(self, z0, n_obs, solver, controller) -> int:
+        # AD keeps every trial step's stage intermediates alive — grows with
+        # the per-segment step budget (the Table 1 N_z*N_f*N_t*m column).
+        state = 2 if isinstance(solver, ALF) else 1
+        return ((n_obs - 1) * controller.step_bound * solver.stages
+                * state * state_nbytes(z0))
+
+
 def odeint_naive(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
-                 ts=None, solver: str = "alf", n_steps: int = 0,
+                 ts=None, solver="alf", n_steps: int = 0,
                  eta: float = 1.0, rtol: float = 1e-2, atol: float = 1e-3,
                  max_steps: int = 64) -> Pytree:
-    """Differentiable integration; with ``ts`` returns the (T, ...) trajectory
-    (``traj[0] == z0``), otherwise z(t1) via the length-1 grid [t0, t1]."""
+    """Differentiable integration (legacy kwargs facade); with ``ts`` returns
+    the (T, ...) trajectory (``traj[0] == z0``), otherwise z(t1) via the
+    length-1 grid [t0, t1]."""
     sol = get_solver(solver)
+    if isinstance(sol, ALF) and eta != sol.eta:
+        sol = ALF(eta=float(eta))
+    controller = controller_from_kwargs(n_steps, rtol, atol, max_steps)
+    method = Naive()
+    method.validate(sol, controller)
     scalar = ts is None
     grid = scalar_time_grid(t0, t1) if scalar else as_time_grid(ts)
-
-    if solver == "alf":
-        check_eta(eta)
-        v0 = init_velocity(f, params, z0, grid[0])
-
-        if n_steps > 0:
-            def step(state, t, h):
-                z, v = state
-                return alf_step(f, params, z, v, t, h, eta)
-
-            _, (z_traj, _) = integrate_fixed_grid(step, (z0, v0), grid,
-                                                  n_steps)
-        else:
-            def trial(state, t, h):
-                z, v = state
-                z1, v1, err = alf_step_with_error(f, params, z, v, t, h, eta)
-                return (z1, v1), error_ratio(err, z, z1, rtol, atol)
-
-            out = integrate_adaptive_grid(trial, (z0, v0), grid, order=2,
-                                          rtol=rtol, atol=atol,
-                                          max_steps=max_steps)
-            z_traj, _ = out.traj
-        return _tm(lambda b: b[-1], z_traj) if scalar else z_traj
-
-    assert isinstance(sol, ButcherTableau)
-    if n_steps > 0:
-        def step(z, t, h):
-            z1, _ = sol.step(f, params, z, t, h)
-            return z1
-
-        _, z_traj = integrate_fixed_grid(step, z0, grid, n_steps)
-        return _tm(lambda b: b[-1], z_traj) if scalar else z_traj
-
-    if sol.b_err is None:
-        raise ValueError(f"solver {solver!r} has no embedded error estimate; "
-                         "pass n_steps for fixed-step integration")
-
-    def trial(z, t, h):
-        z1, err = sol.step(f, params, z, t, h)
-        return z1, error_ratio(err, z, z1, rtol, atol)
-
-    out = integrate_adaptive_grid(trial, z0, grid, order=sol.order, rtol=rtol,
-                                  atol=atol, max_steps=max_steps)
-    return _tm(lambda b: b[-1], out.traj) if scalar else out.traj
+    traj, _ = method.integrate(f, params, z0, grid, sol, controller)
+    return _tm(lambda b: b[-1], traj) if scalar else traj

@@ -3,23 +3,36 @@
 A residual block ``y = x + g(x)`` is the one-step Euler discretization of
 ``dz/dt = g(z, t)``; an ODEBlock replaces the discrete residual with a
 continuous integration ``y = z(T), z(0) = x`` (paper Sec 4.2), sharing the
-same parameterization g. The gradient method (MALI / adjoint / ACA / naive),
-solver, step count/tolerances and damping are all config knobs.
+same parameterization g. :class:`OdeSettings` is the flat/hashable config
+record model configs carry; ``as_objects()`` lowers it to the composable
+Solver / StepController / GradientMethod / SaveAt objects the
+:func:`repro.core.solve.solve` entry point takes.
 
 With ``obs_times`` set, the block exposes the full observation-grid
-trajectory (one native ``odeint(..., ts=...)`` call — latent-ODE decoders,
+trajectory (one native ``SaveAt(ts=...)`` integration — latent-ODE decoders,
 CNF visualization, deep supervision) instead of only the end state.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Optional, Tuple
 
 import jax.numpy as jnp
 
-from .api import odeint
+from .aca import ACA
+from .adjoint import Backsolve
+from .alf import check_eta
+from .interface import SaveAt
+from .mali import MALI
+from .naive import Naive
+from .solve import solve
+from .solvers import ALF, SOLVERS, get_solver
+from .stepsize import AdaptiveController, ConstantSteps
 
 Pytree = Any
+
+_METHODS = ("mali", "naive", "aca", "adjoint")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,11 +54,45 @@ class OdeSettings:
     def validate(self) -> "OdeSettings":
         if self.mode not in ("off", "per_block"):
             raise ValueError(f"bad ode.mode {self.mode!r}")
+        if self.method not in _METHODS:
+            raise ValueError(f"bad ode.method {self.method!r}; "
+                             f"choose from {_METHODS}")
+        if self.solver not in SOLVERS:
+            raise ValueError(f"bad ode.solver {self.solver!r}; "
+                             f"choose from {sorted(SOLVERS)}")
         if self.method == "mali" and self.solver != "alf":
             raise ValueError("MALI requires the ALF solver")
+        if self.n_steps < 0:
+            raise ValueError(f"ode.n_steps must be >= 0 (0 = adaptive), "
+                             f"got {self.n_steps}")
+        if self.max_steps < 1:
+            raise ValueError(f"ode.max_steps must be >= 1, "
+                             f"got {self.max_steps}")
+        if self.rtol < 0.0 or self.atol < 0.0:
+            raise ValueError(f"ode tolerances must be non-negative, got "
+                             f"rtol={self.rtol}, atol={self.atol}")
+        if not math.isfinite(self.t1):
+            raise ValueError(f"ode.t1 must be finite, got {self.t1}")
+        if self.solver == "alf":
+            check_eta(self.eta)
         if self.obs_times is not None and len(self.obs_times) < 2:
             raise ValueError("obs_times needs at least 2 timepoints")
         return self
+
+    def as_objects(self):
+        """Lower to (solver, controller, gradient, saveat) for solve()."""
+        self.validate()
+        solver = (ALF(eta=self.eta) if self.solver == "alf"
+                  else get_solver(self.solver))
+        controller = (ConstantSteps(self.n_steps) if self.n_steps > 0 else
+                      AdaptiveController(self.rtol, self.atol,
+                                         self.max_steps))
+        gradient = {"mali": MALI(fused_bwd=self.fused_bwd),
+                    "naive": Naive(), "aca": ACA(),
+                    "adjoint": Backsolve()}[self.method]
+        saveat = (SaveAt() if self.obs_times is None else
+                  SaveAt(ts=jnp.asarray(self.obs_times, jnp.float32)))
+        return solver, controller, gradient, saveat
 
 
 def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],
@@ -56,13 +103,11 @@ def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],
     ``settings.obs_times`` is set — the trajectory pytree with leading axis
     ``len(obs_times)`` from a single native observation-grid integration.
     """
-    s = settings.validate()
-    ts = None if s.obs_times is None else jnp.asarray(s.obs_times, jnp.float32)
+    solver, controller, gradient, saveat = settings.as_objects()
 
     def apply(params: Pytree, x: Pytree) -> Pytree:
-        return odeint(dynamics, params, x, 0.0, s.t1, ts=ts, method=s.method,
-                      solver=s.solver, n_steps=s.n_steps, eta=s.eta,
-                      rtol=s.rtol, atol=s.atol, max_steps=s.max_steps,
-                      fused_bwd=s.fused_bwd)
+        return solve(dynamics, params, x, 0.0, settings.t1, solver=solver,
+                     controller=controller, gradient=gradient,
+                     saveat=saveat).ys
 
     return apply

@@ -1,14 +1,21 @@
-"""Runge-Kutta solver steps (pytree-generic) + the ALF solver adapter.
+"""Solver objects (the ``psi`` step functions of paper Algo 1) + registry.
 
-Each solver exposes::
+The solver axis of the paper's Table 1 is a small object hierarchy:
 
-    solver.step(f, params, z, t, h) -> (z_next, err)   # err=None if no pair
-    solver.order                                        # classical order
+* :class:`Solver` — the interface every solver implements: how to build the
+  integrator state from ``z0`` (plain ``z`` for Runge-Kutta, the augmented
+  ``(z, v)`` pair for ALF), how to advance it one (trial) step, and how to
+  read ``z`` back out of it.
+* :class:`RungeKutta` — a solver backed by a :class:`ButcherTableau`
+  (order / FSAL / embedded-error metadata live on the tableau).
+* :class:`ALF` — the Asynchronous Leapfrog solver of the paper (Algo 2/3),
+  carrying its damping coefficient ``eta`` (Appendix A.5; ``eta=1`` is the
+  plain invertible step MALI reconstructs in the backward pass).
 
-These are the ``psi`` functions of paper Algo 1. ALF is special: it carries
-the augmented state ``(z, v)`` and is handled by the integrators directly
-(see core/mali.py); :data:`ALF` here only records metadata so the benchmark /
-config layer can treat solver choice uniformly.
+Every solver is a frozen (hashable) dataclass so it can ride inside the
+static configuration of a ``jax.custom_vjp``. ``get_solver`` resolves the
+legacy string names ('alf' | 'euler' | 'heun_euler' | 'midpoint' | 'rk23' |
+'rk4' | 'dopri5' ...) to registered instances.
 
 Tableaus: Euler, Heun2 (a.k.a. Heun-Euler when used with its embedded Euler
 error — the solver ACA used in the paper), explicit midpoint, Bogacki-
@@ -22,10 +29,14 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from .alf import alf_step_with_error, check_eta, init_velocity
+
 _tm = jax.tree_util.tree_map
 
 Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+# trial(state, t, h) -> (state_next, err_ratio); err_ratio <= 1 accepts.
+TrialFn = Callable[[Pytree, jax.Array, jax.Array], Tuple[Pytree, jax.Array]]
 
 
 def _weighted_sum(terms: Sequence[Tuple[float, Pytree]]) -> Optional[Pytree]:
@@ -117,31 +128,144 @@ DOPRI5 = ButcherTableau(
 )
 
 
+class Solver:
+    """Interface shared by every solver (Table 1's solver axis).
+
+    ``init_state``/``output`` mediate between the user-facing state ``z``
+    and the solver's internal state (ALF augments it with the tracked
+    velocity ``v``); ``trial_fn`` closes a uniform trial step
+    ``(state, t, h) -> (state_next, err_ratio)`` over a controller's error
+    norm, so fixed- and adaptive-step drivers share one code path.
+    """
+
+    name: str = "?"
+    order: int = 0
+    stages: int = 1                 # f-evals per (trial) step
+    has_error_estimate: bool = False
+
+    def init_state(self, f: Dynamics, params: Pytree, z0: Pytree,
+                   t0: jax.Array) -> Pytree:
+        return z0
+
+    def output(self, state: Pytree) -> Pytree:
+        """Extract ``z`` from the solver state (structural — also works on
+        stacked trajectories of states)."""
+        return state
+
+    def trial_fn(self, f: Dynamics, params: Pytree, controller) -> TrialFn:
+        raise NotImplementedError
+
+
 @dataclasses.dataclass(frozen=True)
-class AlfSolverMeta:
-    """Marker for the ALF solver (augmented-state; handled by integrators)."""
-    name: str = "alf"
-    order: int = 2
-    b_err: Optional[Tuple[float, ...]] = (1.0,)  # has an embedded estimate
+class RungeKutta(Solver):
+    """A Runge-Kutta solver defined by its Butcher tableau."""
+
+    tableau: ButcherTableau = EULER
+
+    @property
+    def name(self) -> str:
+        return self.tableau.name
+
+    @property
+    def order(self) -> int:
+        return self.tableau.order
+
+    @property
+    def stages(self) -> int:
+        return len(self.tableau.c)
+
+    @property
+    def has_error_estimate(self) -> bool:
+        return self.tableau.b_err is not None
+
+    @property
+    def fsal(self) -> bool:
+        return self.tableau.fsal
+
+    def trial_fn(self, f: Dynamics, params: Pytree, controller) -> TrialFn:
+        def trial(z, t, h):
+            z1, err = self.tableau.step(f, params, z, t, h)
+            return z1, controller.error_ratio(err, z, z1)
+
+        return trial
 
 
-ALF = AlfSolverMeta()
+@dataclasses.dataclass(frozen=True)
+class ALF(Solver):
+    """Asynchronous Leapfrog (paper Algo 2): the invertible solver MALI is
+    defined on. State is the augmented ``(z, v)`` pair with
+    ``v0 = f(z0, t0)`` (paper Sec 3.1); ``eta`` is the damping coefficient
+    of Appendix A.5 (``eta == 0.5`` makes the step non-invertible and is
+    rejected)."""
+
+    eta: float = 1.0
+
+    name = "alf"
+    order = 2
+    stages = 1
+    has_error_estimate = True       # embedded 1st-vs-2nd order estimate
+
+    def __post_init__(self):
+        check_eta(self.eta)
+
+    def init_state(self, f, params, z0, t0):
+        return (z0, init_velocity(f, params, z0, t0))
+
+    def output(self, state):
+        return state[0]
+
+    def trial_fn(self, f, params, controller) -> TrialFn:
+        def trial(state, t, h):
+            z, v = state
+            z1, v1, err = alf_step_with_error(f, params, z, v, t, h, self.eta)
+            return (z1, v1), controller.error_ratio(err, z, z1)
+
+        return trial
+
+
+def Euler() -> RungeKutta:
+    return RungeKutta(EULER)
+
+
+def HeunEuler() -> RungeKutta:
+    return RungeKutta(HEUN2)
+
+
+def Midpoint() -> RungeKutta:
+    return RungeKutta(MIDPOINT)
+
+
+def Bosh3() -> RungeKutta:
+    return RungeKutta(BOSH3)
+
+
+def Rk4() -> RungeKutta:
+    return RungeKutta(RK4)
+
+
+def Dopri5() -> RungeKutta:
+    return RungeKutta(DOPRI5)
+
 
 SOLVERS = {
-    "euler": EULER,
-    "heun2": HEUN2,
-    "heun_euler": HEUN2,
-    "midpoint": MIDPOINT,
-    "bosh3": BOSH3,
-    "rk23": BOSH3,
-    "rk2": HEUN2,
-    "rk4": RK4,
-    "dopri5": DOPRI5,
-    "alf": ALF,
+    "euler": RungeKutta(EULER),
+    "heun2": RungeKutta(HEUN2),
+    "heun_euler": RungeKutta(HEUN2),
+    "midpoint": RungeKutta(MIDPOINT),
+    "bosh3": RungeKutta(BOSH3),
+    "rk23": RungeKutta(BOSH3),
+    "rk2": RungeKutta(HEUN2),
+    "rk4": RungeKutta(RK4),
+    "dopri5": RungeKutta(DOPRI5),
+    "alf": ALF(),
 }
 
 
-def get_solver(name: str):
+def get_solver(name) -> Solver:
+    """Resolve a solver: pass through :class:`Solver` instances, look up
+    legacy string names in the registry."""
+    if isinstance(name, Solver):
+        return name
     try:
         return SOLVERS[name]
     except KeyError:

@@ -1,12 +1,25 @@
-"""Adaptive step-size control (paper Algo 1) — PI controller + error norms.
+"""Step-size policy objects (paper Algo 1) — the step-controller axis.
 
-jit-friendly: everything is expressed as pure functions over scalars/pytrees;
-the accept/reject loop lives in the integrators (bounded ``lax.scan`` with
-masking so the same code path works under reverse-mode AD where needed).
+The accept/reject policy of Algo 1 is an object, not a pair of free
+functions + an ``n_steps`` kwarg:
+
+* :class:`ConstantSteps` — ``n`` uniform sub-steps per observation segment
+  (the paper's large-scale fixed-h setting; every trial is accepted).
+* :class:`AdaptiveController` — the PI-free error-ratio controller of
+  Algo 1 with ``rtol``/``atol`` and a bounded ``max_steps`` trial budget per
+  segment (rejected trials still cost f-evals), warm-starting each segment
+  at the previous segment's converged step size.
+
+Both are frozen (hashable) dataclasses so they can ride in the static
+config of a ``jax.custom_vjp``; the numeric policy itself stays expressed
+as pure jit-friendly functions over scalars/pytrees, and the driving loop
+lives in :mod:`repro.core.integrate` (one controller-parameterized driver —
+a bounded masked ``lax.scan``, usable under reverse-mode AD).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import dataclasses
+from typing import Any, ClassVar, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -66,3 +79,109 @@ def initial_step_size(rtol: float, atol: float, span: jax.Array) -> jax.Array:
     base = jnp.abs(span) * 0.05
     tol_scale = jnp.clip(jnp.sqrt(rtol + atol), 1e-4, 1.0)
     return jnp.sign(span) * jnp.maximum(base * tol_scale, jnp.abs(span) * 1e-4)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepController:
+    """Base step-size policy. Subclasses own the accept/reject decision
+    (``error_ratio``: <= 1 accepts) and the per-segment recorded-step bound
+    (``step_bound``: the static buffer size the backward sweeps mask over).
+    """
+
+    adaptive: ClassVar[bool] = False
+
+    def error_ratio(self, err: Any, z0: Any, z1: Any) -> jax.Array:
+        raise NotImplementedError
+
+    @property
+    def step_bound(self) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantSteps(StepController):
+    """Fixed uniform grid: ``n`` sub-steps per observation segment."""
+
+    n: int = 8
+
+    adaptive: ClassVar[bool] = False
+
+    def __post_init__(self):
+        try:
+            n = int(self.n)
+        except (TypeError, ValueError):
+            n = -1
+        if n < 1 or n != self.n:
+            raise ValueError(
+                f"ConstantSteps needs a positive integer step count, got "
+                f"n={self.n!r}")
+        object.__setattr__(self, "n", n)
+
+    def error_ratio(self, err, z0, z1) -> jax.Array:
+        # Every trial is accepted; the (free) embedded error estimate is
+        # dead code the compiler drops.
+        return jnp.zeros(())
+
+    @property
+    def step_bound(self) -> int:
+        return self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveController(StepController):
+    """Paper Algo 1: accept iff the atol/rtol-scaled error RMS is <= 1,
+    shrink on reject / grow on accept with the clipped single-exponent
+    factor, under a ``max_steps`` trial budget per segment."""
+
+    rtol: float = 1e-2
+    atol: float = 1e-3
+    max_steps: int = 64
+
+    adaptive: ClassVar[bool] = True
+
+    def __post_init__(self):
+        if self.rtol < 0.0 or self.atol < 0.0:
+            raise ValueError(
+                f"tolerances must be non-negative, got rtol={self.rtol}, "
+                f"atol={self.atol}")
+        if self.rtol == 0.0 and self.atol == 0.0:
+            raise ValueError("rtol and atol cannot both be zero")
+        try:
+            m = int(self.max_steps)
+        except (TypeError, ValueError):
+            m = -1
+        if m < 1 or m != self.max_steps:
+            raise ValueError(
+                f"max_steps must be a positive integer, got {self.max_steps!r}")
+        object.__setattr__(self, "max_steps", m)
+        object.__setattr__(self, "rtol", float(self.rtol))
+        object.__setattr__(self, "atol", float(self.atol))
+
+    def error_ratio(self, err, z0, z1) -> jax.Array:
+        if err is None:
+            raise ValueError(
+                "adaptive step control needs a solver with an embedded "
+                "error estimate; use ConstantSteps with this solver")
+        return error_ratio(err, z0, z1, self.rtol, self.atol)
+
+    @property
+    def step_bound(self) -> int:
+        return self.max_steps
+
+    def initial_step(self, span: jax.Array) -> jax.Array:
+        return initial_step_size(self.rtol, self.atol, span)
+
+    def next_step(self, h: jax.Array, ratio: jax.Array, order: int) -> jax.Array:
+        return next_step_size(h, ratio, order)
+
+
+def controller_from_kwargs(n_steps: int, rtol: float, atol: float,
+                           max_steps: int) -> StepController:
+    """Map the legacy kwargs convention (n_steps > 0 fixed, == 0 adaptive)
+    to a StepController — shared by every legacy odeint facade."""
+    if n_steps < 0:
+        raise ValueError(f"n_steps must be >= 0 (0 selects adaptive control),"
+                         f" got {n_steps}")
+    if n_steps > 0:
+        return ConstantSteps(int(n_steps))
+    return AdaptiveController(float(rtol), float(atol), int(max_steps))

@@ -22,7 +22,7 @@ from jax import lax
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.distributed.sharding import hint
-from repro.core import odeint
+from repro.core import solve
 from .attention import (KVCache, attention_decode, attention_prefill,
                         attention_train, init_attention)
 from .common import rmsnorm, rmsnorm_init
@@ -113,11 +113,10 @@ def _residual_branch(cfg: ModelConfig, branch_params: Pytree, x: jax.Array,
     ode = cfg.ode
     if ode.mode == "off":
         return x + inner(p["inner"], rmsnorm(p["norm"], x))
-    zT = odeint(dynamics, p, x.astype(jnp.float32), 0.0, ode.t1,
-                method=ode.method, solver=ode.solver, n_steps=ode.n_steps,
-                eta=ode.eta, rtol=ode.rtol, atol=ode.atol,
-                max_steps=ode.max_steps,
-                fused_bwd=getattr(ode, "fused_bwd", True))
+    solver, controller, gradient, saveat = ode.as_objects()
+    zT = solve(dynamics, p, x.astype(jnp.float32), 0.0, ode.t1,
+               solver=solver, controller=controller, gradient=gradient,
+               saveat=saveat).ys
     return zT.astype(x.dtype)
 
 

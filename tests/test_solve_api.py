@@ -1,0 +1,280 @@
+"""Composable solve() API tests.
+
+(a) Compat-shim equivalence: the legacy string-keyed ``odeint(...)`` and the
+object-based ``solve(...)`` must produce IDENTICAL outputs and gradients for
+every method x fixed/adaptive x scalar/grid combination (the shim builds the
+same objects, so this is a bit-for-bit check, not a tolerance check).
+(b) ``Solution.stats`` consistency with the old ``mali_forward_stats``
+side channel it replaces.
+(c) SaveAt modes incl. dense per-step output, and the boundary validation
+of solver/controller/gradient compatibility and malformed inputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import mlp_dynamics, mlp_params
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, Dopri5, HeunEuler, MALI, METHODS,
+                        Naive, SaveAt, Solution, mali_forward_stats, odeint,
+                        solve)
+
+ALPHA = 0.5
+TS = jnp.linspace(0.0, 1.0, 6)
+
+
+def _toy_f(params, z, t):
+    return params["alpha"] * z
+
+
+def _toy():
+    return {"alpha": jnp.float32(ALPHA)}, jnp.float32(1.3)
+
+
+def _objects(method, fixed):
+    gradient = {"mali": MALI(), "naive": Naive(), "aca": ACA(),
+                "adjoint": Backsolve()}[method]
+    solver = {"mali": ALF(), "naive": ALF(), "aca": HeunEuler(),
+              "adjoint": Dopri5()}[method]
+    controller = (ConstantSteps(4) if fixed else
+                  AdaptiveController(1e-4, 1e-5, 64))
+    return gradient, solver, controller
+
+
+def _legacy_kwargs(fixed):
+    return (dict(n_steps=4) if fixed else
+            dict(n_steps=0, rtol=1e-4, atol=1e-5, max_steps=64))
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("fixed", [True, False], ids=["fixed", "adaptive"])
+@pytest.mark.parametrize("grid", [False, True], ids=["scalar", "grid"])
+def test_shim_equivalence_outputs_and_gradients(method, fixed, grid):
+    """odeint(strings) == solve(objects).ys bit-for-bit, values AND grads."""
+    params, z0 = _toy()
+    ts = TS if grid else None
+    gradient, solver, controller = _objects(method, fixed)
+    saveat = SaveAt(ts=ts) if grid else SaveAt()
+
+    def loss_legacy(p, z):
+        out = odeint(_toy_f, p, z, 0.0, 1.0, ts=ts, method=method,
+                     **_legacy_kwargs(fixed))
+        return jnp.sum(out ** 2)
+
+    def loss_obj(p, z):
+        sol = solve(_toy_f, p, z, 0.0, 1.0, solver=solver,
+                    controller=controller, gradient=gradient, saveat=saveat)
+        return jnp.sum(sol.ys ** 2)
+
+    (L1, g1) = jax.value_and_grad(loss_legacy, argnums=(0, 1))(params, z0)
+    (L2, g2) = jax.value_and_grad(loss_obj, argnums=(0, 1))(params, z0)
+    np.testing.assert_array_equal(np.asarray(L1), np.asarray(L2))
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shim_equivalence_pytree_dynamics():
+    """Equivalence also holds for MLP dynamics with pytree params."""
+    d = 5
+    params = mlp_params(jax.random.PRNGKey(0), d)
+    f = mlp_dynamics()
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (d,))
+
+    legacy = odeint(f, params, z0, 0.0, 1.0, method="mali", n_steps=6)
+    sol = solve(f, params, z0, 0.0, 1.0, gradient=MALI(),
+                controller=ConstantSteps(6))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(sol.ys))
+
+
+def test_stats_consistent_with_mali_forward_stats():
+    """Solution.stats replaces the mali_forward_stats side channel:
+    n_accepted matches, n_accepted + n_rejected == old n_evals, same zT."""
+    params, z0 = _toy()
+    sol = solve(_toy_f, params, z0, 0.0, 1.0, gradient=MALI(),
+                controller=AdaptiveController(1e-3, 1e-4, 64))
+    zT, n_acc, n_ev = mali_forward_stats(_toy_f, params, z0, 0.0, 1.0,
+                                         rtol=1e-3, atol=1e-4, max_steps=64)
+    assert int(sol.stats.n_accepted) == int(n_acc)
+    assert int(sol.stats.n_accepted) + int(sol.stats.n_rejected) == int(n_ev)
+    np.testing.assert_array_equal(np.asarray(sol.ys), np.asarray(zT))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_stats_populated_all_methods(method):
+    """Every gradient method returns a Solution with populated stats."""
+    params, z0 = _toy()
+    gradient, solver, controller = _objects(method, fixed=False)
+    sol = solve(_toy_f, params, z0, 0.0, 1.0, solver=solver,
+                controller=controller, gradient=gradient)
+    assert int(sol.stats.n_accepted) >= 1
+    assert int(sol.stats.n_rejected) >= 0
+    # every trial costs at least one f-eval; ALF adds the v0 init
+    assert int(sol.stats.n_fevals) >= int(sol.stats.n_accepted)
+    assert sol.stats.n_segments == 1
+    assert sol.stats.residual_bytes > 0
+
+
+def test_stats_fixed_step_accounting():
+    """ConstantSteps: rejected == 0, accepted == segments * n, ALF f-evals
+    == steps + 1 (the v0 init)."""
+    params, z0 = _toy()
+    sol = solve(_toy_f, params, z0, solver=ALF(),
+                controller=ConstantSteps(4), gradient=MALI(),
+                saveat=SaveAt(ts=TS))
+    n_seg = TS.shape[0] - 1
+    assert int(sol.stats.n_rejected) == 0
+    assert int(sol.stats.n_accepted) == 4 * n_seg
+    assert int(sol.stats.n_fevals) == 4 * n_seg + 1
+    assert sol.stats.n_segments == n_seg
+
+
+def test_mali_residual_bytes_constant_in_steps():
+    """The Stats residual estimate mirrors the Table 1 claim: constant in
+    the step budget for MALI, growing for naive."""
+    params, z0 = _toy()
+
+    def res_bytes(gradient, n):
+        return solve(_toy_f, params, z0, gradient=gradient,
+                     solver=ALF(), controller=ConstantSteps(n)).stats \
+            .residual_bytes
+
+    assert res_bytes(MALI(), 4) == res_bytes(MALI(), 64)
+    assert res_bytes(Naive(), 64) > res_bytes(Naive(), 4)
+
+
+def test_saveat_trajectory_matches_legacy_ts():
+    params, z0 = _toy()
+    legacy = odeint(_toy_f, params, z0, ts=TS, method="mali", n_steps=3)
+    sol = solve(_toy_f, params, z0, gradient=MALI(),
+                controller=ConstantSteps(3), saveat=SaveAt(ts=TS))
+    assert isinstance(sol, Solution)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(sol.ys))
+    np.testing.assert_array_equal(np.asarray(sol.ts), np.asarray(TS))
+
+
+def test_saveat_steps_dense_output():
+    """SaveAt(steps=True): rows 0..n_accepted are the step-start states then
+    the final state, at the recorded step times."""
+    params, z0 = _toy()
+    sol = solve(_toy_f, params, z0, 0.0, 1.0, solver=ALF(),
+                controller=ConstantSteps(8), saveat=SaveAt(steps=True))
+    n = int(sol.stats.n_accepted)
+    assert n == 8
+    ts = np.asarray(sol.ts)[:n + 1]
+    np.testing.assert_allclose(ts, np.linspace(0.0, 1.0, 9), atol=1e-6)
+    exact = float(z0) * np.exp(ALPHA * ts)
+    np.testing.assert_allclose(np.asarray(sol.ys)[:n + 1], exact, atol=5e-3)
+
+
+def test_saveat_steps_adaptive_and_grad():
+    params, z0 = _toy()
+    sol = solve(_toy_f, params, z0, 0.0, 1.0, solver=ALF(),
+                controller=AdaptiveController(1e-4, 1e-5, 64),
+                saveat=SaveAt(steps=True))
+    n = int(sol.stats.n_accepted)
+    assert 2 <= n <= 64
+    ts = np.asarray(sol.ts)[:n + 1]
+    assert ts[0] == 0.0 and ts[-1] == 1.0
+    exact = float(z0) * np.exp(ALPHA * ts)
+    np.testing.assert_allclose(np.asarray(sol.ys)[:n + 1], exact, atol=5e-3)
+
+    # dense output is differentiable (direct backprop through the record)
+    def loss(p):
+        s = solve(_toy_f, p, z0, 0.0, 1.0, solver=ALF(),
+                  controller=ConstantSteps(4), saveat=SaveAt(steps=True))
+        return jnp.sum(s.ys ** 2)
+
+    g = jax.grad(loss)(params)
+    assert np.isfinite(float(g["alpha"]))
+
+
+def test_solve_composes_with_jit_vmap_grad():
+    params, z0 = _toy()
+
+    @jax.jit
+    def batch_loss(p, zs):
+        fn = jax.vmap(lambda z: solve(_toy_f, p, z, gradient=MALI(),
+                                      controller=ConstantSteps(4)).ys)
+        return jnp.sum(fn(zs) ** 2)
+
+    g = jax.grad(batch_loss)(params, jnp.linspace(0.5, 2.0, 8))
+    assert np.isfinite(float(g["alpha"]))
+
+
+# --- boundary validation -----------------------------------------------
+
+
+def test_validation_solver_method_compatibility():
+    params, z0 = _toy()
+    with pytest.raises(ValueError, match="ALF solver only"):
+        solve(_toy_f, params, z0, solver=HeunEuler(), gradient=MALI(),
+              controller=ConstantSteps(2))
+    with pytest.raises(ValueError, match="Runge-Kutta"):
+        solve(_toy_f, params, z0, solver=ALF(), gradient=ACA(),
+              controller=ConstantSteps(2))
+    with pytest.raises(ValueError, match="error estimate"):
+        solve(_toy_f, params, z0, solver="euler", gradient=Naive())
+
+
+def test_validation_controller_construction():
+    with pytest.raises(ValueError):
+        AdaptiveController(rtol=-1e-3)
+    with pytest.raises(ValueError):
+        AdaptiveController(rtol=0.0, atol=0.0)
+    with pytest.raises(ValueError):
+        AdaptiveController(max_steps=0)
+    with pytest.raises(ValueError):
+        ConstantSteps(0)
+    with pytest.raises(ValueError):
+        ConstantSteps(-3)
+
+
+def test_validation_ts_grid():
+    params, z0 = _toy()
+    for bad in (jnp.asarray([0.5]), jnp.zeros((2, 2)),
+                jnp.asarray([0.0, 0.5, 0.3]), jnp.asarray([0.0, 0.0, 1.0])):
+        with pytest.raises(ValueError):
+            solve(_toy_f, params, z0, gradient=Naive(),
+                  controller=ConstantSteps(2), saveat=SaveAt(ts=bad))
+
+
+def test_validation_legacy_kwarg_drop():
+    """The historical silent-kwarg-drop now raises with actionable errors."""
+    params, z0 = _toy()
+    with pytest.raises(ValueError, match="eta"):
+        odeint(_toy_f, params, z0, method="aca", eta=0.9, n_steps=4)
+    with pytest.raises(ValueError, match="fused_bwd"):
+        odeint(_toy_f, params, z0, method="naive", fused_bwd=False, n_steps=4)
+    with pytest.raises(ValueError, match="n_steps"):
+        odeint(_toy_f, params, z0, n_steps=-1)
+    with pytest.warns(UserWarning, match="fixed-step"):
+        odeint(_toy_f, params, z0, n_steps=4, rtol=1e-3)
+    # eta *with* the ALF solver stays valid for every method that takes it
+    out = odeint(_toy_f, params, z0, method="naive", solver="alf", eta=0.9,
+                 n_steps=4)
+    assert np.isfinite(float(out))
+
+
+def test_validation_saveat():
+    with pytest.raises(ValueError, match="not both"):
+        SaveAt(ts=jnp.asarray([0.0, 1.0]), steps=True)
+
+
+def test_ode_settings_validate_extended():
+    from repro.core import OdeSettings
+    with pytest.raises(ValueError, match="n_steps"):
+        OdeSettings(mode="per_block", n_steps=-1).validate()
+    with pytest.raises(ValueError, match="max_steps"):
+        OdeSettings(mode="per_block", max_steps=0).validate()
+    with pytest.raises(ValueError, match="non-negative"):
+        OdeSettings(mode="per_block", rtol=-0.5).validate()
+    with pytest.raises(ValueError, match="bad ode.method"):
+        OdeSettings(mode="per_block", method="nope").validate()
+    # the happy path lowers to the object axes
+    solver, controller, gradient, saveat = OdeSettings(
+        mode="per_block", method="mali", n_steps=4, eta=0.9).as_objects()
+    assert isinstance(solver, ALF) and solver.eta == 0.9
+    assert isinstance(controller, ConstantSteps) and controller.n == 4
+    assert isinstance(gradient, MALI)
