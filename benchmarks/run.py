@@ -21,7 +21,8 @@ import time
 from .common import print_rows
 
 BENCHES = ("toy_gradient_error", "memory_cost", "solver_invariance",
-           "speed", "damped", "adversarial", "observation_grid")
+           "speed", "damped", "adversarial", "observation_grid",
+           "batched_throughput")
 
 
 def _dryrun_summary_rows():

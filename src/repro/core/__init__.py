@@ -17,7 +17,9 @@ from .api import (METHODS, mali_forward_stats, odeint, odeint_aca,
                   odeint_adjoint, odeint_mali, odeint_naive)
 from .integrate import (as_time_grid, integrate_adaptive_grid,
                         integrate_fixed_grid, integrate_grid, integrate_span)
-from .interface import GradientMethod, RunStats, SaveAt, Solution, Stats
+from .interface import (Batching, GradientMethod, Lockstep, PerSample,
+                        RunStats, SaveAt, Sharded, Solution, Stats,
+                        batch_size)
 from .ode_block import OdeSettings, ode_block
 from .solve import solve
 from .aca import ACA
@@ -34,6 +36,7 @@ __all__ = [
     "alf_step", "alf_inverse", "alf_step_with_error", "init_velocity",
     # composable API
     "solve", "Solution", "SaveAt", "Stats", "RunStats",
+    "Batching", "Lockstep", "PerSample", "Sharded", "batch_size",
     "GradientMethod", "MALI", "Naive", "ACA", "Backsolve", "Adjoint",
     "Solver", "RungeKutta", "ALF", "ButcherTableau",
     "Euler", "HeunEuler", "Midpoint", "Bosh3", "Rk4", "Dopri5",

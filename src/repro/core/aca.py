@@ -109,7 +109,12 @@ _aca_grid.defvjp(_aca_grid_fwd, _aca_grid_bwd)
 @dataclasses.dataclass(frozen=True)
 class ACA(GradientMethod):
     """Adaptive Checkpoint Adjoint (Table 1 'ACA' row): checkpoint every
-    accepted step, re-play each under a local VJP in the backward sweep."""
+    accepted step, re-play each under a local VJP in the backward sweep.
+
+    Under ``solve(batching=PerSample())`` the checkpoint buffer and the
+    recorded (t_i, h_i) replay script gain a leading batch row, so the
+    backward sweep re-plays each sample's own accepted steps — per-row
+    step counts differ, the masked scan pads the shorter rows."""
 
     name = "aca"
 

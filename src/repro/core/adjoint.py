@@ -120,7 +120,12 @@ _adjoint_grid.defvjp(_adjoint_grid_fwd, _adjoint_grid_bwd)
 @dataclasses.dataclass(frozen=True)
 class Backsolve(GradientMethod):
     """Reverse-time adjoint (Table 1 'adjoint' row): O(T) forward memory,
-    gradients subject to reverse-integration drift (paper Thm 2.1)."""
+    gradients subject to reverse-integration drift (paper Thm 2.1).
+
+    Under ``solve(batching=PerSample())`` the backward's reverse-time
+    augmented IVP is itself integrated with per-row adaptive control (the
+    vmapped masked scan), so each sample's reverse solve converges on its
+    own schedule — including the backward pass's f-eval budget."""
 
     name = "adjoint"
 

@@ -56,6 +56,15 @@ def check_eta(eta: float) -> None:
         raise ValueError("eta == 0.5 makes the damped ALF step non-invertible")
 
 
+BACKENDS = ("reference", "pallas")
+
+
+def check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown ALF backend {backend!r}; "
+                         f"available: {BACKENDS}")
+
+
 def alf_step(
     f: Dynamics,
     params: Pytree,
@@ -118,6 +127,7 @@ def alf_step_with_error(
     t: jax.Array,
     h: jax.Array,
     eta: float = 1.0,
+    backend: str = "reference",
 ) -> Tuple[Pytree, Pytree, Pytree]:
     """ALF step + embedded local-error estimate.
 
@@ -127,12 +137,26 @@ def alf_step_with_error(
     ``h * (u1 - v)`` is the standard embedded 1st-vs-2nd-order error
     estimate, and matches the leading local-truncation term of Thm 3.1
     (Eq. 19: L_z ~ (h^2/2) f_z (f - v)) up to the bounded factor f_z.
+
+    ``backend='pallas'`` routes the elementwise algebra around the ``f``
+    evaluation through the fused :mod:`repro.kernels.alf_step` kernels
+    (one flattened [rows, 128] pass over the whole state pytree; interpret
+    mode on CPU, compiled on TPU). The kernel launch is not
+    reverse-differentiable in interpret mode — it is only reached from
+    custom_vjp forwards (MALI) and non-differentiated re-integrations
+    (Backsolve), never from direct backprop (Naive validates this away).
     """
     s1 = t + h / 2
-    k1 = _tm(lambda zi, vi: zi + vi * (h / 2), z, v)
-    u1 = f(params, k1, s1)
-    v_out = _tm(lambda vi, ui: vi + 2.0 * eta * (ui - vi), v, u1)
-    z_out = _tm(lambda ki, vo: ki + vo * (h / 2), k1, v_out)
+    if backend == "pallas":
+        from repro.kernels.alf_step.ops import alf_midpoint, alf_update
+        k1 = alf_midpoint(z, v, h, use_pallas=True)
+        u1 = f(params, k1, s1)
+        z_out, v_out = alf_update(k1, v, u1, h, eta=eta, use_pallas=True)
+    else:
+        k1 = _tm(lambda zi, vi: zi + vi * (h / 2), z, v)
+        u1 = f(params, k1, s1)
+        v_out = _tm(lambda vi, ui: vi + 2.0 * eta * (ui - vi), v, u1)
+        z_out = _tm(lambda ki, vo: ki + vo * (h / 2), k1, v_out)
     err = _tm(lambda ui, vi: h * (ui - vi), u1, v)
     return z_out, v_out, err
 

@@ -30,6 +30,17 @@ The trial signature is uniform across solvers and controllers::
 (solvers close their embedded error estimate over the controller's norm via
 ``Solver.trial_fn``; for ``ConstantSteps`` the ratio is constant 0 and the
 estimate is dead code).
+
+Batching: the adaptive loop is written as a *masked* bounded scan — the
+carry holds ``(state, t, h, done)`` and a finished trajectory rides along
+as a no-op (``done`` freezes state/time and stops the eval counter) — so
+it IS the per-sample batching driver: under ``jax.vmap`` every carry slot
+gains a batch row, the accept/reject predicate and the recorded
+``(t_i, h_i)`` replay buffers become per-row, and each sample converges on
+its own schedule inside one compiled scan. ``solve(batching=PerSample())``
+enters here through :meth:`GradientMethod.integrate_batched`; an unbatched
+call over a batch-shaped state instead reduces the controller norm across
+the whole batch — lockstep (``Batching=Lockstep``).
 """
 from __future__ import annotations
 

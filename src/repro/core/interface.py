@@ -8,6 +8,11 @@ controller axes:
   Each method validates its solver/controller compatibility (MALI => ALF),
   owns its ``jax.custom_vjp`` wiring, and integrates over an observation
   grid through one uniform entry point.
+* :class:`Batching` — the batching axis of a solve over a leading batch
+  dimension: :class:`Lockstep` (the whole batch is one ODE system — one
+  shared controller decision per trial), :class:`PerSample` (each sample
+  carries its own ``(t, h, done)`` adaptive state), :class:`Sharded`
+  (shard the batch over a mesh axis, data-parallel).
 * :class:`RunStats` — the raw accepted/trial counters a method's forward
   pass emits (threaded through the custom_vjp primal as integer outputs
   whose cotangents are ignored).
@@ -17,6 +22,7 @@ controller axes:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -63,12 +69,21 @@ class Stats(NamedTuple):
     chosen gradient method (MALI: the per-observation (z, v) pairs —
     O(T * N_z), constant in step count; ACA/naive grow with the step
     budget), computed from static shapes — not a measurement.
+
+    Batched solves (``solve(..., batching=...)``) additionally populate
+    ``per_sample`` with shape-(B,) counters, one row per batch sample. The
+    scalar counters then hold per-row *totals* (the sum over rows), so a
+    lockstep batch reports B x the shared trial count — directly comparable
+    with a per-sample batch, where rows accept/reject independently. For
+    unbatched solves ``per_sample`` is ``None`` and the scalars keep their
+    single-trajectory meaning.
     """
     n_accepted: jax.Array   # int32
     n_rejected: jax.Array   # int32
     n_fevals: jax.Array     # int32
     n_segments: int         # static: observation segments (T - 1)
     residual_bytes: int     # static: analytic residual-memory estimate
+    per_sample: Optional["RunStats"] = None  # (B,) rows for batched solves
 
 
 class Solution(NamedTuple):
@@ -113,6 +128,124 @@ class SaveAt:
                              "not both")
 
 
+class Batching:
+    """Base of the batching axis: how one ``solve`` treats the leading
+    batch dimension of ``z0``.
+
+    Batched solves return ``ys`` with the batch axis FIRST — ``(B, ...)``
+    for the end state, ``(B, T, ...)`` for a ``SaveAt(ts=grid)`` trajectory
+    — regardless of mode, so swapping Lockstep <-> PerSample <-> Sharded
+    never changes output shapes. Subclasses are frozen dataclasses
+    (hashable, jit-static-safe).
+    """
+
+    name: str = "?"
+
+    def validate(self, controller, saveat) -> None:
+        """Reject/flag incompatible axes before tracing (overridden)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Lockstep(Batching):
+    """The whole batch is one ODE system (Chen et al. 2018's concatenated
+    ``odeint`` semantics, made explicit): the adaptive controller's error
+    norm reduces over every sample, so there is ONE shared accept/reject
+    decision per trial and one sample's rejected step re-trials the whole
+    batch. Cheapest per trial (no per-row bookkeeping); right for
+    stiffness-homogeneous batches. This is exactly what an unbatched
+    ``solve`` over a batch-shaped ``z0`` has always done implicitly."""
+
+    name = "lockstep"
+
+
+@dataclasses.dataclass(frozen=True)
+class PerSample(Batching):
+    """Per-sample adaptive control: each sample carries its own
+    ``(t, h, done)`` state through the masked scan
+    (:mod:`repro.core.integrate`), accept/reject is decided row-by-row by
+    the batched controller norm, and finished samples ride along as no-ops
+    (their padding iterations update nothing and cost no counted f-evals).
+    The gradient methods' custom_vjps replay per-sample ``(t_i, h_i)``
+    buffers, so reverse trajectories stay bit-accurate per row. Fewer total
+    f-evals than :class:`Lockstep` on stiffness-heterogeneous batches."""
+
+    name = "per_sample"
+
+    def validate(self, controller, saveat) -> None:
+        if saveat is not None and saveat.steps:
+            raise ValueError(
+                "SaveAt(steps=True) under PerSample() batching is ragged "
+                "(each sample accepts a different number of steps); use "
+                "SaveAt(ts=grid) for a shared observation grid, or "
+                "Lockstep() for a shared step sequence")
+        if controller is not None and not controller.adaptive:
+            warnings.warn(
+                "PerSample() with a fixed-step controller degenerates to "
+                "Lockstep(): every sample takes the identical step "
+                "sequence, so there is no per-row accept/reject to "
+                "exploit. Use AdaptiveController(...) or Lockstep().",
+                UserWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharded(Batching):
+    """Shard the batch over a mesh axis (``jax.shard_map`` data
+    parallelism): a fleet of solves runs one shard per device group along
+    ``axis``, each shard applying ``inner`` batching (:class:`Lockstep` or
+    :class:`PerSample`) to its local rows. Requires an active mesh context
+    (``with mesh: ...`` — see :func:`repro.launch.mesh.make_host_mesh` /
+    ``make_production_mesh``) whose axis names include ``axis``, and a
+    batch size divisible by that axis size."""
+
+    axis: str = "data"
+    inner: Batching = dataclasses.field(default_factory=Lockstep)
+
+    name = "sharded"
+
+    def __post_init__(self):
+        if isinstance(self.inner, Sharded):
+            raise ValueError("Sharded(inner=Sharded(...)) does not nest; "
+                             "pick Lockstep() or PerSample() for inner")
+
+    def validate(self, controller, saveat) -> None:
+        if saveat is not None and saveat.steps:
+            raise ValueError(
+                "SaveAt(steps=True) under Sharded() batching is ragged "
+                "across shards (each shard's controller accepts its own "
+                "step count); use SaveAt(ts=grid) or an unsharded "
+                "Lockstep() solve")
+        self.inner.validate(controller, saveat)
+
+
+def batch_size(z0: Pytree) -> int:
+    """Static leading-axis batch size of a batched state pytree.
+
+    Every leaf must carry the batch axis in front; raises an actionable
+    error when a leaf is scalar or leaves disagree (the classic bug of
+    batching only part of the state).
+    """
+    leaves = jax.tree_util.tree_leaves(z0)
+    if not leaves:
+        raise ValueError("batched solve needs a non-empty z0 pytree")
+    sizes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(z0)[0]:
+        shape = getattr(leaf, "shape", ())
+        key = jax.tree_util.keystr(path) or "<root>"
+        if len(shape) == 0:
+            raise ValueError(
+                f"batched solve: z0 leaf {key} is a scalar — every leaf "
+                "must have the batch axis as its leading dimension (add "
+                "one with z[:, None]... or drop batching=)")
+        sizes[key] = shape[0]
+    if len(set(sizes.values())) != 1:
+        detail = ", ".join(f"{k}: {v}" for k, v in sizes.items())
+        raise ValueError(
+            "batched solve: inconsistent leading (batch) axis across z0 "
+            f"leaves — {detail}. All leaves must share the same batch "
+            "size; non-batched per-sample constants belong in params.")
+    return next(iter(sizes.values()))
+
+
 class GradientMethod:
     """Base of the gradient-estimation axis (paper Table 1 rows).
 
@@ -145,6 +278,20 @@ class GradientMethod:
     def integrate(self, f, params, z0: Pytree, ts: jax.Array, solver,
                   controller) -> Tuple[Pytree, RunStats]:
         raise NotImplementedError
+
+    def integrate_batched(self, f, params, z0: Pytree, ts: jax.Array,
+                          solver, controller) -> Tuple[Pytree, RunStats]:
+        """PerSample driver: vmap the per-trajectory masked-scan driver
+        over the leading batch axis of ``z0``. Under vmap the scan carry
+        — ``(state, t, h, done)`` and the recorded ``(t_i, h_i)`` replay
+        buffers — is per-row, so each sample accepts/rejects independently,
+        finished samples ride along as no-ops, and this method's
+        custom_vjp backward replays each row's own step script. Returns
+        ``(traj, RunStats)`` with leading axis B (traj: ``(B, T, ...)``,
+        counters: ``(B,)``)."""
+        return jax.vmap(
+            lambda z: self.integrate(f, params, z, ts, solver, controller)
+        )(z0)
 
     def residual_bytes(self, z0: Pytree, n_obs: int, solver,
                        controller) -> int:

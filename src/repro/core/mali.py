@@ -64,6 +64,7 @@ class MaliConfig(NamedTuple):
     eta: float
     controller: StepController
     fused_bwd: bool = True  # share the inverse's f-eval with the local VJP
+    backend: str = "reference"  # forward step algebra: jnp or fused Pallas
 
 
 def _traj_row(traj: Pytree, k: int) -> Pytree:
@@ -148,12 +149,19 @@ def _close_v0_vjp(f, params, z0, t0, a_z, a_v, g_params):
 
 def _mali_forward(cfg: MaliConfig, params, z0, ts):
     """Shared forward: one grid integration of the augmented (z, v) state
-    under cfg's controller. Returns the full GridResult bookkeeping."""
+    under cfg's controller. Returns the full GridResult bookkeeping.
+
+    The forward runs inside the custom_vjp primal — never differentiated
+    through — so cfg.backend may route the step algebra through the fused
+    Pallas kernels; the backward sweep stays on the reference path (its
+    inverse+VJP algebra is hand-fused already, see _fused_inverse_and_vjp).
+    """
     v0 = init_velocity(cfg.f, params, z0, ts[0])
 
     def trial(state, t, h):
         z, v = state
-        z1, v1, err = alf_step_with_error(cfg.f, params, z, v, t, h, cfg.eta)
+        z1, v1, err = alf_step_with_error(cfg.f, params, z, v, t, h,
+                                          cfg.eta, cfg.backend)
         return (z1, v1), cfg.controller.error_ratio(err, z, z1)
 
     return integrate_grid(trial, (z0, v0), ts, controller=cfg.controller,
@@ -241,7 +249,8 @@ class MALI(GradientMethod):
                 "Runge-Kutta solvers.")
 
     def integrate(self, f, params, z0, ts, solver, controller):
-        cfg = MaliConfig(f, solver.eta, controller, self.fused_bwd)
+        cfg = MaliConfig(f, solver.eta, controller, self.fused_bwd,
+                         solver.backend)
         traj, stats = _mali_grid(cfg, params, z0, ts)
         return traj, stats
 

@@ -36,12 +36,25 @@ Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 class Naive(GradientMethod):
     """Direct backprop through the integration loop (Table 1 'naive' row):
     the memory-hungry oracle every memory-efficient method is checked
-    against."""
+    against. Under ``solve(batching=PerSample())`` it is vmapped row-wise
+    like every other method, which makes it the gradient oracle for the
+    batched drivers too (per-row adaptive loops included)."""
 
     name = "naive"
 
     def default_solver(self) -> Solver:
         return ALF()
+
+    def validate(self, solver, controller) -> None:
+        super().validate(solver, controller)
+        if isinstance(solver, ALF) and solver.backend == "pallas":
+            raise ValueError(
+                "Naive() backpropagates directly through every solver "
+                "step, and the Pallas ALF kernel has no reverse rule in "
+                "interpret mode; use ALF(backend='reference') with "
+                "Naive(), or keep backend='pallas' with MALI()/Backsolve() "
+                "(their backward passes never differentiate the forward "
+                "kernel launch)")
 
     def integrate(self, f, params, z0, ts, solver, controller):
         state0 = solver.init_state(f, params, z0, ts[0])

@@ -30,6 +30,12 @@ Each axis maps back to a paper concept:
 * ``saveat`` — what to return: ``z(t1)``, the observation-grid trajectory
   (the shape MALI's O(T * N_z) residual claim is stated over), or dense
   per-step output.
+* ``batching`` (:mod:`repro.core.interface`) — how a leading batch axis of
+  ``z0`` is integrated: :class:`Lockstep` (one shared accept/reject per
+  trial, the Chen et al. 2018 concatenated-system semantics),
+  :class:`PerSample` (each row carries its own ``(t, h, done)`` through
+  the masked scan), or :class:`Sharded` (shard_map data parallelism over
+  a mesh axis — the serving path).
 
 ``Solution.stats`` replaces the old ``mali_forward_stats`` side channel:
 accepted/rejected step counts and forward f-evals come from the actual run
@@ -49,8 +55,9 @@ import jax.numpy as jnp
 from .aca import ACA
 from .adjoint import Adjoint, Backsolve
 from .integrate import as_time_grid, integrate_grid, scalar_time_grid
-from .interface import (GradientMethod, RunStats, SaveAt, Solution, Stats,
-                        make_run_stats, state_nbytes)
+from .interface import (Batching, GradientMethod, Lockstep, PerSample,
+                        RunStats, SaveAt, Sharded, Solution, Stats,
+                        batch_size, make_run_stats, state_nbytes)
 from .mali import MALI
 from .naive import Naive
 from .solvers import ALF, Solver, get_solver
@@ -85,6 +92,12 @@ def _solve_dense(f, params, z0, t0, t1, solver, controller,
     [t0, t1] segment. Dense output pins each intermediate state by
     definition, so gradients flow by direct backprop through the recorded
     sequence (there is nothing for a memory-efficient method to save)."""
+    if isinstance(solver, ALF) and solver.backend == "pallas":
+        raise ValueError(
+            "SaveAt(steps=True) backpropagates directly through the "
+            "recorded step sequence, which the Pallas ALF kernel does not "
+            "support in interpret mode; use ALF(backend='reference') for "
+            "dense output")
     grid = scalar_time_grid(t0, t1)
     state0 = solver.init_state(f, params, z0, grid[0])
     trial = solver.trial_fn(f, params, controller)
@@ -112,11 +125,160 @@ def _solve_dense(f, params, z0, t0, t1, solver, controller,
     return Solution(ys=ys, ts=ts_out, stats=stats)
 
 
+# ---------------------------------------------------------------------------
+# Batched drivers (the Batching axis)
+# ---------------------------------------------------------------------------
+
+def _detached(rstats: RunStats) -> RunStats:
+    # Counters are integer outputs of a custom_vjp primal; detach before any
+    # arithmetic so their instantiated float0 tangents never reach a jvp rule.
+    return RunStats(*(jax.lax.stop_gradient(c) for c in rstats))
+
+
+def _batched_stats(per: RunStats, gradient: GradientMethod, z0: Pytree,
+                   grid: jax.Array, solver: Solver,
+                   controller: StepController) -> Stats:
+    """Stats for a batched solve: ``per_sample`` keeps the (B,) rows, the
+    scalar counters hold the per-row totals (sum over rows — so lockstep
+    reports B x its shared trial count, comparable with per-sample)."""
+    per = _detached(per)
+    return Stats(
+        n_accepted=jnp.sum(per.n_accepted).astype(jnp.int32),
+        n_rejected=jnp.sum(per.n_rejected).astype(jnp.int32),
+        n_fevals=jnp.sum(per.n_fevals).astype(jnp.int32),
+        n_segments=int(grid.shape[0]) - 1,
+        residual_bytes=gradient.residual_bytes(z0, int(grid.shape[0]),
+                                               solver, controller),
+        per_sample=per,
+    )
+
+
+def _broadcast_rows(rstats: RunStats, nb: int) -> RunStats:
+    """Lockstep per-row counters: every row takes the shared step sequence
+    and is evaluated on every shared trial, so each row's counters equal
+    the batch-system's shared counters."""
+    det = _detached(rstats)
+    return RunStats(*(jnp.broadcast_to(c, (nb,)) for c in det))
+
+
+def _batch_first(traj: Pytree) -> Pytree:
+    """(T, B, ...) observation trajectory -> the batch-first (B, T, ...)
+    convention every batched mode returns."""
+    return _tm(lambda b: jnp.moveaxis(b, 0, 1), traj)
+
+
+def _solve_lockstep(f, params, z0, grid, nb, solver, controller, gradient,
+                    trajectory):
+    """One shared controller decision per trial: integrate the batch as a
+    single concatenated system (the unbatched machinery on the batched
+    state — exactly the implicit pre-Batching semantics, made explicit)."""
+    traj, rstats = gradient.integrate(f, params, z0, grid, solver,
+                                      controller)
+    per = _broadcast_rows(rstats, nb)
+    ys = _batch_first(traj) if trajectory else _tm(lambda b: b[-1], traj)
+    return ys, per
+
+
+def _solve_per_sample(f, params, z0, grid, solver, controller, gradient,
+                      trajectory):
+    """Row-independent adaptive control via the vmapped masked-scan driver
+    (each sample carries its own (t, h, done); see integrate.py)."""
+    traj, per = gradient.integrate_batched(f, params, z0, grid, solver,
+                                           controller)
+    ys = traj if trajectory else _tm(lambda b: b[:, -1], traj)
+    return ys, _detached(per)
+
+
+def _solve_sharded(f, params, z0, grid, nb, solver, controller, gradient,
+                   trajectory, batching: Sharded):
+    """Data-parallel fleet: shard_map the inner batched driver over one
+    mesh axis, one shard of the batch per device group (the serving path —
+    reuses the ambient production/host mesh, see repro.launch.mesh)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import ambient_mesh
+
+    mesh = ambient_mesh()
+    if mesh is None:
+        raise ValueError(
+            "Sharded() batching needs an active mesh context: wrap the "
+            "solve in `with mesh:` (repro.launch.mesh.make_host_mesh() or "
+            "make_production_mesh()), or use Lockstep()/PerSample() on a "
+            "single device")
+    if batching.axis not in mesh.axis_names:
+        raise ValueError(
+            f"Sharded(axis={batching.axis!r}): the active mesh has axes "
+            f"{mesh.axis_names}; pass one of those (the production mesh "
+            "uses 'data' for batch parallelism)")
+    n_shards = mesh.shape[batching.axis]
+    if nb % n_shards != 0:
+        raise ValueError(
+            f"Sharded(axis={batching.axis!r}): batch size {nb} is not "
+            f"divisible by the axis size {n_shards}; pad the batch or "
+            "pick a divisible size")
+
+    inner_per_sample = isinstance(batching.inner, PerSample)
+
+    def shard_body(p, z_local):
+        if inner_per_sample:
+            return _solve_per_sample(f, p, z_local, grid, solver,
+                                     controller, gradient, trajectory)
+        return _solve_lockstep(f, p, z_local, grid, nb // n_shards, solver,
+                               controller, gradient, trajectory)
+
+    spec = P(batching.axis)
+    ys, per = shard_map(shard_body, mesh=mesh, in_specs=(P(), spec),
+                        out_specs=(spec, spec), check_rep=False)(params, z0)
+    return ys, per
+
+
+def _solve_batched(f, params, z0, t0, t1, solver, controller, gradient,
+                   saveat, batching: Batching) -> Solution:
+    nb = batch_size(z0)
+
+    if saveat.steps:
+        # Lockstep's shared step sequence keeps dense output rectangular;
+        # PerSample/Sharded raggedness is rejected in Batching.validate.
+        sol = _solve_dense(f, params, z0, t0, t1, solver, controller,
+                           gradient)
+        per = _broadcast_rows(
+            RunStats(sol.stats.n_accepted, sol.stats.n_rejected,
+                     sol.stats.n_fevals), nb)
+        # Same contract as _batched_stats: scalars are the per-row totals.
+        stats = Stats(
+            n_accepted=jnp.sum(per.n_accepted).astype(jnp.int32),
+            n_rejected=jnp.sum(per.n_rejected).astype(jnp.int32),
+            n_fevals=jnp.sum(per.n_fevals).astype(jnp.int32),
+            n_segments=sol.stats.n_segments,
+            residual_bytes=sol.stats.residual_bytes,
+            per_sample=per)
+        return Solution(ys=_batch_first(sol.ys), ts=sol.ts, stats=stats)
+
+    trajectory = saveat.ts is not None
+    grid = as_time_grid(saveat.ts) if trajectory else scalar_time_grid(t0, t1)
+
+    if isinstance(batching, Sharded):
+        ys, per = _solve_sharded(f, params, z0, grid, nb, solver, controller,
+                                 gradient, trajectory, batching)
+    elif isinstance(batching, PerSample):
+        ys, per = _solve_per_sample(f, params, z0, grid, solver, controller,
+                                    gradient, trajectory)
+    else:
+        ys, per = _solve_lockstep(f, params, z0, grid, nb, solver,
+                                  controller, gradient, trajectory)
+
+    stats = _batched_stats(per, gradient, z0, grid, solver, controller)
+    ts_out = grid if trajectory else grid[-1]
+    return Solution(ys=ys, ts=ts_out, stats=stats)
+
+
 def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
           solver: Optional[Solver] = None,
           controller: Optional[StepController] = None,
           gradient: Optional[GradientMethod] = None,
-          saveat: Optional[SaveAt] = None) -> Solution:
+          saveat: Optional[SaveAt] = None,
+          batching: Optional[Batching] = None) -> Solution:
     """Integrate ``dz/dt = f(params, z, t)`` and return a :class:`Solution`.
 
     Arguments (all axes default to the paper's MALI configuration):
@@ -130,12 +292,24 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     * ``saveat`` — a :class:`~repro.core.interface.SaveAt`; defaults to the
       end state ``z(t1)``. With ``SaveAt(ts=grid)``, ``t0``/``t1`` are
       ignored and ``ys`` is the (T, ...) trajectory with ``ys[0] == z0``.
+    * ``batching`` — a :class:`~repro.core.interface.Batching`, making the
+      leading axis of ``z0`` an explicit batch axis: :class:`Lockstep`
+      (one shared controller decision per trial — the implicit semantics
+      an unbatched solve applies to a batch-shaped state, made explicit),
+      :class:`PerSample` (row-independent adaptive control; fewer total
+      f-evals on stiffness-heterogeneous batches), or :class:`Sharded`
+      (data-parallel over a mesh axis). Batched ``ys`` is batch-first:
+      ``(B, ...)`` end state or ``(B, T, ...)`` trajectory, identical
+      across modes, and ``stats`` gains per-sample rows (see
+      :class:`Stats`). ``None`` (default) keeps the single-trajectory
+      semantics untouched.
 
     The returned :class:`Solution` is a pytree (jit/vmap/grad-safe);
     differentiate any loss of ``sol.ys`` and the chosen gradient method's
     custom VJP applies. Cross-axis compatibility (MALI => ALF, adaptive
-    control => embedded error estimate, ACA => Runge-Kutta) is validated
-    eagerly with actionable errors.
+    control => embedded error estimate, ACA => Runge-Kutta, per-sample
+    batching => rectangular output) is validated eagerly with actionable
+    errors.
     """
     gradient = MALI() if gradient is None else gradient
     if not isinstance(gradient, GradientMethod):
@@ -149,6 +323,15 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     saveat = SaveAt() if saveat is None else saveat
 
     gradient.validate(solver, controller)
+
+    if batching is not None:
+        if not isinstance(batching, Batching):
+            raise TypeError(
+                f"batching must be a Batching (Lockstep, PerSample or "
+                f"Sharded), got {batching!r}")
+        batching.validate(controller, saveat)
+        return _solve_batched(f, params, z0, t0, t1, solver, controller,
+                              gradient, saveat, batching)
 
     if saveat.steps:
         return _solve_dense(f, params, z0, t0, t1, solver, controller,
@@ -164,5 +347,6 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
 
 
 __all__ = ["solve", "Solution", "SaveAt", "Stats", "GradientMethod",
+           "Batching", "Lockstep", "PerSample", "Sharded",
            "MALI", "Naive", "ACA", "Backsolve", "Adjoint", "ALF",
            "AdaptiveController", "state_nbytes"]

@@ -29,7 +29,7 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .alf import alf_step_with_error, check_eta, init_velocity
+from .alf import alf_step_with_error, check_backend, check_eta, init_velocity
 
 _tm = jax.tree_util.tree_map
 
@@ -196,9 +196,19 @@ class ALF(Solver):
     defined on. State is the augmented ``(z, v)`` pair with
     ``v0 = f(z0, t0)`` (paper Sec 3.1); ``eta`` is the damping coefficient
     of Appendix A.5 (``eta == 0.5`` makes the step non-invertible and is
-    rejected)."""
+    rejected).
+
+    ``backend='pallas'`` runs the step's elementwise state algebra through
+    the fused :mod:`repro.kernels.alf_step` Pallas kernels (one flattened
+    lane-aligned pass over the whole state pytree per step; interpret mode
+    on CPU, compiled on TPU) instead of per-leaf jnp ops. The kernel is
+    numerically identical and kernel-vs-reference parity is enforced in
+    tests; direct-backprop consumers (``Naive``, dense ``SaveAt(steps=
+    True)``) reject it because the interpret-mode launch has no reverse
+    rule."""
 
     eta: float = 1.0
+    backend: str = "reference"
 
     name = "alf"
     order = 2
@@ -207,6 +217,7 @@ class ALF(Solver):
 
     def __post_init__(self):
         check_eta(self.eta)
+        check_backend(self.backend)
 
     def init_state(self, f, params, z0, t0):
         return (z0, init_velocity(f, params, z0, t0))
@@ -217,7 +228,8 @@ class ALF(Solver):
     def trial_fn(self, f, params, controller) -> TrialFn:
         def trial(state, t, h):
             z, v = state
-            z1, v1, err = alf_step_with_error(f, params, z, v, t, h, self.eta)
+            z1, v1, err = alf_step_with_error(f, params, z, v, t, h,
+                                              self.eta, self.backend)
             return (z1, v1), controller.error_ratio(err, z, z1)
 
         return trial

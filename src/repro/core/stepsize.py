@@ -33,7 +33,14 @@ MAX_FACTOR = 10.0    # paper's IncreaseFactor ceiling
 
 
 def error_ratio(err: Any, z0: Any, z1: Any, rtol: float, atol: float) -> jax.Array:
-    """RMS of err scaled by atol + rtol*max(|z0|,|z1|). Accept iff <= 1."""
+    """RMS of err scaled by atol + rtol*max(|z0|,|z1|). Accept iff <= 1.
+
+    The reduction runs over EVERY element of the state pytree — this single
+    scalar is what makes a batch-shaped state integrate in lockstep (one
+    shared accept/reject for all samples, ``Batching=Lockstep``). The
+    per-sample batching driver gets row-wise decisions by vmapping the
+    whole trial loop, which confines this reduction to one sample's slice.
+    """
     leaves_err = jax.tree_util.tree_leaves(err)
     leaves_0 = jax.tree_util.tree_leaves(z0)
     leaves_1 = jax.tree_util.tree_leaves(z1)

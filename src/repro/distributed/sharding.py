@@ -252,14 +252,33 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh of the innermost active ``with mesh:`` context, or None.
+
+    This is how mesh-aware library code (``solve(batching=Sharded(...))``,
+    the activation :func:`hint`) discovers the production/host mesh without
+    threading it through every call signature.
+    """
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """Leading-axis batch sharding for a fleet of ODE states: place the
+    batch dim on ``axis``, replicate everything else (the device layout
+    ``solve(batching=Sharded(axis))`` computes over — pre-placing inputs
+    with this avoids a resharding transfer on entry)."""
+    return NamedSharding(mesh, P(axis))
+
+
 def model_axis_size() -> int:
     """Size of the ambient mesh's 'model' axis (1 when no mesh)."""
     import os
     if os.environ.get("REPRO_NO_HINTS"):
         return 1
-    from jax._src import mesh as mesh_lib
-    mesh = mesh_lib.thread_resources.env.physical_mesh
-    if mesh.empty or "model" not in mesh.axis_names:
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return 1
     return mesh.shape["model"]
 

@@ -1,11 +1,30 @@
-"""Serving driver: batched prefill + autoregressive decode.
+"""Serving driver: LM prefill/decode AND the batched-ODE solve fleet.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --prompt-len 32 --decode-tokens 16 --batch 4
+Two serving paths share this driver:
 
-Greedy decoding over the synthetic token stream; prints per-phase timings
-and tokens/s. The same prefill/decode step functions are what the dry-run
-lowers at the assigned 32k/500k shapes on the production mesh.
+* **LM path** (default) — batched prefill + autoregressive decode::
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+          --prompt-len 32 --decode-tokens 16 --batch 4
+
+  Greedy decoding over the synthetic token stream; prints per-phase timings
+  and tokens/s. The same prefill/decode step functions are what the dry-run
+  lowers at the assigned 32k/500k shapes on the production mesh.
+
+* **ODE path** (``--mode ode``) — a fleet of independent Neural-ODE solves
+  served data-parallel, the batched ``solve()`` capping the Batching axis::
+
+      PYTHONPATH=src python -m repro.launch.serve --mode ode --batch 64 \
+          [--ode-batching per_sample|lockstep] [--production-mesh]
+
+  Each request is one initial state; the fleet is integrated by
+  ``solve(..., batching=Sharded(axis='data', inner=...))`` — shard_map
+  over the mesh's 'data' axis (production: 16-way, host: all local
+  devices), with per-shard :class:`~repro.core.interface.PerSample`
+  adaptive control by default so one stiff request never re-trials its
+  shard-mates. Prints solves/s, total/ per-request f-evals from
+  ``Solution.stats.per_sample``, and the request-level step spread — the
+  numbers ``benchmarks/batched_throughput.py`` tracks in CI.
 """
 from __future__ import annotations
 
@@ -18,8 +37,9 @@ import numpy as np
 
 from repro.configs import DEFAULT_ODE, get_config, smoke_config
 from repro.core.ode_block import OdeSettings
-from repro.distributed.sharding import (batch_shardings, cache_shardings,
-                                        param_shardings, replicated)
+from repro.distributed.sharding import (batch_shardings, batch_sharding,
+                                        cache_shardings, param_shardings,
+                                        replicated)
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_lm
@@ -85,19 +105,95 @@ def serve(arch: str, *, smoke: bool = True, ode: bool = True,
     return toks
 
 
+def serve_ode(*, batch: int = 64, d_state: int = 32, t1: float = 1.0,
+              batching: str = "per_sample", rtol: float = 1e-3,
+              atol: float = 1e-4, max_steps: int = 512,
+              production_mesh: bool = False, seed: int = 0):
+    """Serve a fleet of independent Neural-ODE solves (one per request)
+    data-parallel over the mesh — the batched-solve serving path.
+
+    Each request integrates a shared MLP vector field from its own initial
+    state with its own stiffness scale (requests are heterogeneous, like
+    production traffic), under ``Sharded(axis='data',
+    inner=PerSample()|Lockstep())``. Returns the final states.
+    """
+    from repro.core import (ALF, AdaptiveController, Lockstep, MALI,
+                            PerSample, Sharded, solve)
+
+    mesh = make_production_mesh() if production_mesh else make_host_mesh()
+    inner = PerSample() if batching == "per_sample" else Lockstep()
+    rng = np.random.default_rng(seed)
+
+    # Shared vector field; per-request state {"y", "scale"} — 'scale'
+    # spreads request stiffness over a decade (d scale/dt = 0).
+    w1 = jnp.asarray(rng.standard_normal((d_state, d_state)) * 0.4,
+                     jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((d_state, d_state)) * 0.4,
+                     jnp.float32)
+    params = {"w1": w1, "w2": w2}
+
+    def f(p, z, t):
+        h = jnp.tanh(z["y"] @ p["w1"])
+        return {"y": z["scale"] * (h @ p["w2"] - z["y"]),
+                "scale": jnp.zeros_like(z["scale"])}
+
+    z0 = {
+        "y": jnp.asarray(rng.standard_normal((batch, d_state)), jnp.float32),
+        "scale": jnp.asarray(
+            10.0 ** rng.uniform(0.0, 1.0, (batch, 1)), jnp.float32),
+    }
+
+    with mesh:
+        z0 = jax.device_put(z0, batch_sharding(mesh, "data"))
+        run = jax.jit(lambda z: solve(
+            f, params, z, 0.0, t1, solver=ALF(eta=0.9),
+            controller=AdaptiveController(rtol, atol, max_steps),
+            gradient=MALI(),
+            batching=Sharded(axis="data", inner=inner)))
+        sol = run(z0)                       # compile + warm
+        jax.block_until_ready(sol.ys)
+        t0 = time.time()
+        sol = run(z0)
+        jax.block_until_ready(sol.ys)
+        dt = time.time() - t0
+
+    per = sol.stats.per_sample
+    print(f"ode fleet: batch={batch} d={d_state} "
+          f"mesh=data:{mesh.shape['data']} inner={inner.name}")
+    print(f"solve: {dt * 1e3:.1f} ms ({batch / max(dt, 1e-9):.0f} solves/s)")
+    print(f"f-evals: total={int(sol.stats.n_fevals)} "
+          f"per-request min/median/max = {int(jnp.min(per.n_fevals))}/"
+          f"{int(jnp.median(per.n_fevals))}/{int(jnp.max(per.n_fevals))}")
+    print(f"steps: accepted={int(sol.stats.n_accepted)} "
+          f"rejected={int(sol.stats.n_rejected)}")
+    return sol
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="lm", choices=["lm", "ode"],
+                    help="lm: prefill/decode serving; ode: batched-ODE fleet")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-tokens", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="requests per step (default: 4 for lm, 64 for ode)")
     ap.add_argument("--ode", default="on", choices=["on", "off"])
+    ap.add_argument("--ode-batching", default="per_sample",
+                    choices=["per_sample", "lockstep"],
+                    help="inner batching of the sharded ODE fleet")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--production-mesh", action="store_true")
     a = ap.parse_args()
+    if a.mode == "ode":
+        serve_ode(batch=64 if a.batch is None else a.batch,
+                  batching=a.ode_batching,
+                  production_mesh=a.production_mesh)
+        return
     serve(a.arch, smoke=a.smoke, ode=a.ode == "on", prompt_len=a.prompt_len,
-          decode_tokens=a.decode_tokens, batch=a.batch,
+          decode_tokens=a.decode_tokens,
+          batch=4 if a.batch is None else a.batch,
           production_mesh=a.production_mesh)
 
 

@@ -8,6 +8,24 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_collection_modifyitems(config, items):
+    """Skip ``requires_pallas_device`` tests on CPU-only hosts.
+
+    Some Pallas kernels (flash_attention) exceed what interpret mode can
+    emulate with current jax on CPU; they need a real TPU/GPU lowering.
+    The marker replaces the old ``-k "not flash_attention"`` CI deselect so
+    a bare ``pytest`` collects cleanly everywhere.
+    """
+    if jax.default_backend() != "cpu":
+        return
+    skip = pytest.mark.skip(
+        reason="needs a Pallas-compiled accelerator (TPU/GPU); CPU "
+               "interpret mode cannot run this kernel")
+    for item in items:
+        if "requires_pallas_device" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,336 @@
+"""Batching-axis semantics: solve(batching=Lockstep|PerSample|Sharded).
+
+The contract under test:
+
+(a) ``vmap(solve)`` (user-side), ``solve(batching=PerSample())`` and a
+    Python-stacked loop of single-trajectory solves are THE SAME
+    computation — values and gradients — for all four gradient methods and
+    both controllers.
+(b) ``Lockstep()`` is the old implicit semantics of an unbatched solve on
+    a batch-shaped state, made explicit (only the layout changes to
+    batch-first).
+(c) ``Solution.stats.per_sample`` rows match what each sample's individual
+    solve reports; the scalar counters are the per-row totals.
+(d) A finished sample's padding iterations contribute exactly zero
+    gradient (each row's gradient equals its single-solve gradient even
+    when a batchmate runs 10x more steps).
+(e) The boundary validation of the new axis is actionable.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, Dopri5, HeunEuler, Lockstep, MALI,
+                        Naive, PerSample, SaveAt, Sharded, solve)
+
+TOL = dict(rtol=2e-5, atol=2e-6)
+
+METHOD_AXES = {
+    "mali": (MALI(), ALF()),
+    "naive": (Naive(), ALF()),
+    "aca": (ACA(), HeunEuler()),
+    "adjoint": (Backsolve(), Dopri5()),
+}
+
+
+def _f(params, z, t):
+    # per-sample stiffness rides in the state (d rate/dt = 0), so the
+    # batch is genuinely heterogeneous for the adaptive controller
+    return {"y": -z["rate"] * z["y"] + params["c"] * jnp.sin(3.0 * t),
+            "rate": jnp.zeros_like(z["rate"])}
+
+
+def _setup(nb=3):
+    params = {"c": jnp.float32(0.4)}
+    z0 = {"y": jnp.linspace(0.6, 1.4, nb)[:, None],
+          "rate": jnp.asarray([0.3, 2.0, 8.0])[:nb, None]}
+    return params, z0
+
+
+def _controller(fixed):
+    return ConstantSteps(3) if fixed else AdaptiveController(1e-2, 1e-3, 32)
+
+
+def _row(tree, i):
+    return jax.tree_util.tree_map(lambda b: b[i], tree)
+
+
+@pytest.mark.parametrize("method", sorted(METHOD_AXES))
+@pytest.mark.parametrize("fixed", [True, False], ids=["fixed", "adaptive"])
+def test_batched_matches_vmap_and_stacked_singles(method, fixed):
+    """PerSample == vmap(solve) == stacked single solves, values AND grads."""
+    gradient, solver = METHOD_AXES[method]
+    controller = _controller(fixed)
+    params, z0 = _setup()
+    nb = z0["y"].shape[0]
+
+    def single_ys(p, z):
+        return solve(_f, p, z, 0.0, 1.0, solver=solver,
+                     controller=controller, gradient=gradient).ys["y"]
+
+    def batched_ys(p, z):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # PerSample+ConstantSteps warn
+            return solve(_f, p, z, 0.0, 1.0, solver=solver,
+                         controller=controller, gradient=gradient,
+                         batching=PerSample()).ys["y"]
+
+    stacked = jnp.stack([single_ys(params, _row(z0, i)) for i in range(nb)])
+    vmapped = jax.vmap(lambda z: single_ys(params, z))(z0)
+    batched = batched_ys(params, z0)
+    np.testing.assert_allclose(np.asarray(vmapped), np.asarray(stacked),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(stacked),
+                               **TOL)
+
+    # gradients w.r.t. params AND the initial state, all three routes
+    def loss_stacked(p, z):
+        return sum(jnp.sum(single_ys(p, _row(z, i)) ** 2)
+                   for i in range(nb))
+
+    def loss_vmap(p, z):
+        return jnp.sum(jax.vmap(lambda zi: single_ys(p, zi))(z) ** 2)
+
+    def loss_batched(p, z):
+        return jnp.sum(batched_ys(p, z) ** 2)
+
+    g_st = jax.grad(loss_stacked, argnums=(0, 1))(params, z0)
+    g_vm = jax.grad(loss_vmap, argnums=(0, 1))(params, z0)
+    g_ba = jax.grad(loss_batched, argnums=(0, 1))(params, z0)
+    for got in (g_vm, g_ba):
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(g_st)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+def test_lockstep_is_explicit_implicit_semantics():
+    """Lockstep() == the unbatched solve over the batched state, except for
+    the batch-first layout and the per-row stats totals."""
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-3, 1e-4, 64)
+    implicit = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(),
+                     controller=ctrl)
+    explicit = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(),
+                     controller=ctrl, batching=Lockstep())
+    np.testing.assert_array_equal(np.asarray(explicit.ys["y"]),
+                                  np.asarray(implicit.ys["y"]))
+    nb = z0["y"].shape[0]
+    # one shared decision per trial: every row reports the shared counters
+    assert explicit.stats.per_sample.n_accepted.shape == (nb,)
+    np.testing.assert_array_equal(
+        np.asarray(explicit.stats.per_sample.n_accepted),
+        np.full((nb,), int(implicit.stats.n_accepted)))
+    assert int(explicit.stats.n_fevals) == nb * int(implicit.stats.n_fevals)
+
+    # dense per-step output keeps the same stats contract: scalars are the
+    # per-row totals, rows broadcast the shared schedule
+    dense = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(),
+                  controller=ConstantSteps(5), batching=Lockstep(),
+                  saveat=SaveAt(steps=True))
+    assert dense.ys["y"].shape[0] == nb
+    assert int(dense.stats.n_fevals) == int(
+        jnp.sum(dense.stats.per_sample.n_fevals))
+    np.testing.assert_array_equal(np.asarray(dense.stats.per_sample
+                                             .n_accepted),
+                                  np.full((nb,), 5))
+
+    # trajectory saveat: batch-first (B, T, ...) == moveaxis of (T, B, ...)
+    ts = jnp.linspace(0.0, 1.0, 4)
+    implicit_t = solve(_f, params, z0, gradient=MALI(), controller=ctrl,
+                       saveat=SaveAt(ts=ts))
+    explicit_t = solve(_f, params, z0, gradient=MALI(), controller=ctrl,
+                       saveat=SaveAt(ts=ts), batching=Lockstep())
+    assert explicit_t.ys["y"].shape == (nb, 4, 1)
+    np.testing.assert_array_equal(
+        np.asarray(explicit_t.ys["y"]),
+        np.asarray(jnp.moveaxis(implicit_t.ys["y"], 0, 1)))
+
+
+def test_per_sample_stats_match_single_solves():
+    """stats.per_sample rows == each sample's own solve stats; scalars are
+    the row totals."""
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-3, 1e-4, 64)
+    sol = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(), controller=ctrl,
+                batching=PerSample())
+    per = sol.stats.per_sample
+    nb = z0["y"].shape[0]
+    singles = [solve(_f, params, _row(z0, i), 0.0, 1.0, gradient=MALI(),
+                     controller=ctrl).stats for i in range(nb)]
+    for i, s in enumerate(singles):
+        assert int(per.n_accepted[i]) == int(s.n_accepted)
+        assert int(per.n_rejected[i]) == int(s.n_rejected)
+        assert int(per.n_fevals[i]) == int(s.n_fevals)
+    assert int(sol.stats.n_accepted) == sum(int(s.n_accepted)
+                                            for s in singles)
+    assert int(sol.stats.n_fevals) == sum(int(s.n_fevals) for s in singles)
+    # the batch is heterogeneous: the stiff row must really work harder
+    assert int(per.n_accepted[-1]) > int(per.n_accepted[0])
+
+
+def test_per_sample_saves_fevals_vs_lockstep_on_heterogeneous_batch():
+    """The acceptance criterion of the axis: fewer total f-evals when rows
+    accept/reject independently (ALF damping per Appendix A.5 so the stiff
+    rows' adaptive control is live, see benchmarks/batched_throughput)."""
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-3, 1e-4, 128)
+    kw = dict(solver=ALF(eta=0.9), controller=ctrl, gradient=MALI())
+    lock = solve(_f, params, z0, 0.0, 1.0, batching=Lockstep(), **kw)
+    per = solve(_f, params, z0, 0.0, 1.0, batching=PerSample(), **kw)
+    assert int(per.stats.n_fevals) < int(lock.stats.n_fevals)
+
+
+def test_done_sample_padding_steps_contribute_zero_gradient():
+    """Regression: a sample that finishes in ~6 steps rides ~10x longer as
+    a no-op next to a stiff batchmate; its gradient must equal its own
+    single-solve gradient exactly (padding iterations inject nothing)."""
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-3, 1e-4, 64)
+
+    def loss_batched(p, z):
+        sol = solve(_f, p, z, 0.0, 1.0, gradient=MALI(), controller=ctrl,
+                    batching=PerSample())
+        return jnp.sum(sol.ys["y"] ** 2)
+
+    g_z = jax.grad(loss_batched, argnums=1)(params, z0)
+
+    def loss_single(p, zi):
+        return jnp.sum(solve(_f, p, zi, 0.0, 1.0, gradient=MALI(),
+                             controller=ctrl).ys["y"] ** 2)
+
+    for i in range(z0["y"].shape[0]):
+        gi = jax.grad(loss_single, argnums=1)(params, _row(z0, i))
+        np.testing.assert_allclose(np.asarray(_row(g_z, i)["y"]),
+                                   np.asarray(gi["y"]), rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_sharded_on_host_mesh_matches_per_sample():
+    from repro.launch.mesh import make_host_mesh
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-3, 1e-4, 64)
+    ref = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(), controller=ctrl,
+                batching=PerSample())
+    with make_host_mesh():
+        sol = solve(_f, params, z0, 0.0, 1.0, gradient=MALI(),
+                    controller=ctrl,
+                    batching=Sharded(axis="data", inner=PerSample()))
+    np.testing.assert_allclose(np.asarray(sol.ys["y"]),
+                               np.asarray(ref.ys["y"]), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(sol.stats.per_sample.n_accepted),
+        np.asarray(ref.stats.per_sample.n_accepted))
+
+
+@pytest.mark.slow
+def test_sharded_multidevice_subprocess(tmp_path):
+    """4 fake CPU devices: Sharded(axis='data') must reproduce PerSample
+    bit-for-bit and shard the output over the mesh (run in a subprocess so
+    the XLA device-count flag never leaks into this process)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 4
+from repro.core import solve, MALI, AdaptiveController, PerSample, Sharded
+from repro.distributed.sharding import batch_sharding
+from repro.launch.mesh import make_host_mesh
+
+def f(p, z, t): return -z * p
+zb = jnp.linspace(0.5, 2.0, 8)[:, None]
+ctrl = AdaptiveController(1e-3, 1e-4, 32)
+mesh = make_host_mesh()
+assert mesh.shape["data"] == 4
+with mesh:
+    z_sh = jax.device_put(zb, batch_sharding(mesh, "data"))
+    sol = solve(f, jnp.float32(1.0), z_sh, 0.0, 1.0, gradient=MALI(),
+                controller=ctrl, batching=Sharded(axis="data",
+                                                  inner=PerSample()))
+    ref = solve(f, jnp.float32(1.0), zb, 0.0, 1.0, gradient=MALI(),
+                controller=ctrl, batching=PerSample())
+    np.testing.assert_array_equal(np.asarray(sol.ys), np.asarray(ref.ys))
+    assert "data" in str(sol.ys.sharding.spec)
+    try:
+        solve(f, jnp.float32(1.0), zb[:6], gradient=MALI(), controller=ctrl,
+              batching=Sharded())
+        raise AssertionError("divisibility not checked")
+    except ValueError as e:
+        assert "divisible" in str(e)
+print("MULTIDEVICE_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env, cwd=repo)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "MULTIDEVICE_OK" in r.stdout
+
+
+def test_alf_pallas_backend_through_batched_solve():
+    """ALF(backend='pallas') under MALI + PerSample: fused-kernel forward
+    parity with the reference backend (the 'fused step for free' wiring)."""
+    params, z0 = _setup()
+    ctrl = AdaptiveController(1e-2, 1e-3, 32)
+    ref = solve(_f, params, z0, 0.0, 1.0, solver=ALF(), controller=ctrl,
+                gradient=MALI(), batching=PerSample())
+    pal = solve(_f, params, z0, 0.0, 1.0, solver=ALF(backend="pallas"),
+                controller=ctrl, gradient=MALI(), batching=PerSample())
+    np.testing.assert_allclose(np.asarray(pal.ys["y"]),
+                               np.asarray(ref.ys["y"]), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(pal.stats.per_sample.n_accepted),
+        np.asarray(ref.stats.per_sample.n_accepted))
+
+
+# --- boundary validation ---------------------------------------------------
+
+
+def test_batching_validation_inconsistent_batch_axis():
+    params, _ = _setup()
+    bad = {"y": jnp.ones((3, 1)), "rate": jnp.ones((4, 1))}
+    with pytest.raises(ValueError, match="inconsistent leading"):
+        solve(_f, params, bad, gradient=MALI(), batching=PerSample())
+    with pytest.raises(ValueError, match="scalar"):
+        solve(lambda p, z, t: -z, params, jnp.float32(1.0),
+              gradient=MALI(), batching=PerSample())
+
+
+def test_batching_validation_per_sample_fixed_steps_warns():
+    params, z0 = _setup()
+    with pytest.warns(UserWarning, match="degenerates to"):
+        solve(_f, params, z0, gradient=MALI(),
+              controller=ConstantSteps(2), batching=PerSample())
+
+
+def test_batching_validation_dense_saveat():
+    params, z0 = _setup()
+    with pytest.raises(ValueError, match="ragged"):
+        solve(_f, params, z0, gradient=MALI(),
+              saveat=SaveAt(steps=True), batching=PerSample())
+    with pytest.raises(ValueError, match="ragged across shards"):
+        solve(_f, params, z0, gradient=MALI(),
+              saveat=SaveAt(steps=True), batching=Sharded())
+
+
+def test_batching_validation_misc():
+    params, z0 = _setup()
+    with pytest.raises(TypeError, match="Batching"):
+        solve(_f, params, z0, gradient=MALI(), batching="per_sample")
+    with pytest.raises(ValueError, match="mesh context"):
+        solve(_f, params, z0, gradient=MALI(), batching=Sharded())
+    with pytest.raises(ValueError, match="does not nest"):
+        Sharded(inner=Sharded())
+    from repro.launch.mesh import make_host_mesh
+    with make_host_mesh():
+        with pytest.raises(ValueError, match="axes"):
+            solve(_f, params, z0, gradient=MALI(),
+                  batching=Sharded(axis="nonexistent"))
