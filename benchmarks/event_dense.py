@@ -1,0 +1,144 @@
+"""Dense-output and event-solve benchmarks (the time-axis redesign paths).
+
+Two comparisons:
+
+* **Dense-eval throughput** — one ``SaveAt(dense=True)`` solve answers Q
+  arbitrary-time queries through ``Solution.evaluate`` (polynomial
+  arithmetic only) vs re-integrating a ``SaveAt(ts=...)`` grid per query
+  batch. This is the serving-path shape: CNF likelihood / latent-ODE
+  decoding at query times not known when the solve ran.
+* **Event-solve latency** — the native ``solve(..., event=Event(...))``
+  (one dense-recording detection pass + interpolant bisection + one
+  re-solve) vs the naive stop-and-restart loop (chunked Python solves
+  until the sign flips, then bisection by re-integration — the only way
+  to express a hitting time before events were first-class).
+
+Both paths land in ``BENCH_core.json`` via ``benchmarks.run`` so CI tracks
+their trajectory alongside the older paper benches.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ALF, AdaptiveController, ConstantSteps, Event, MALI,
+                        SaveAt, solve)
+
+from .common import Row, time_fn
+
+DIM = 32
+N_QUERIES = 256
+ALPHA = 0.7
+T_END = 3.0
+N_CHUNKS = 24          # stop-and-restart granularity
+N_BISECT = 20          # matches Event(max_bisections=) refinement depth
+
+
+def _f(params, z, t):
+    return -params * z
+
+
+def _setup():
+    params = jnp.float32(ALPHA)
+    z0 = jnp.linspace(0.8, 2.0, DIM)
+    return params, z0
+
+
+# --- dense-eval throughput -------------------------------------------------
+
+def _dense_eval(params, z0, queries):
+    sol = solve(_f, params, z0, 0.0, T_END, solver=ALF(),
+                controller=ConstantSteps(64), saveat=SaveAt(dense=True))
+    return sol.evaluate(queries)
+
+
+def _grid_resolve(params, z0, queries):
+    # Re-integrating to answer the same queries (queries must be sorted to
+    # form a legal grid — the historical workaround for arbitrary-t asks).
+    sol = solve(_f, params, z0, solver=ALF(), controller=ConstantSteps(64),
+                gradient=MALI(), saveat=SaveAt(ts=queries))
+    return sol.ys
+
+
+# --- event solve vs stop-and-restart ---------------------------------------
+
+def _native_event(params, z0):
+    ev = Event(lambda z, t: z[0] - 0.5, direction=-1,
+               max_bisections=N_BISECT)
+    sol = solve(_f, params, z0, 0.0, T_END, solver=ALF(),
+                controller=ConstantSteps(64), gradient=MALI(), event=ev)
+    return sol.stats.event_time
+
+
+def _restart_event(params, z0):
+    """The pre-event workaround: chunked solves in a Python loop, sign
+    check per chunk, then bisection where each iteration re-integrates
+    from the chunk start. Every chunk/bisection is its own compiled
+    solve."""
+    cond = lambda z: float(z[0]) - 0.5
+    chunk = T_END / N_CHUNKS
+    steps_per_chunk = max(64 // N_CHUNKS, 2)
+    z = z0
+    t = 0.0
+    z_prev, t_prev = z, t
+    for _ in range(N_CHUNKS):
+        z_next = solve(_f, params, z, t, t + chunk, solver=ALF(),
+                       controller=ConstantSteps(steps_per_chunk),
+                       gradient=MALI()).ys
+        if cond(z_next) <= 0.0 < cond(z):
+            z_prev, t_prev = z, t
+            break
+        z, t = z_next, t + chunk
+        z_prev, t_prev = z, t
+    else:
+        return T_END
+    # bisect by re-integration from the bracketing chunk start
+    lo, hi = t_prev, t_prev + chunk
+    for _ in range(N_BISECT):
+        mid = 0.5 * (lo + hi)
+        z_mid = solve(_f, params, z_prev, t_prev, mid, solver=ALF(),
+                      controller=ConstantSteps(steps_per_chunk),
+                      gradient=MALI()).ys
+        if cond(z_mid) <= 0.0:
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    params, z0 = _setup()
+    queries = jnp.linspace(0.0, T_END, N_QUERIES)
+
+    dense_fn = jax.jit(_dense_eval)
+    grid_fn = jax.jit(_grid_resolve)
+    us_dense = time_fn(dense_fn, params, z0, queries)
+    us_grid = time_fn(grid_fn, params, z0, queries)
+    rows.append((f"event_dense/dense_eval_us/Q={N_QUERIES}", us_dense,
+                 "one dense solve + evaluate(Q)"))
+    rows.append((f"event_dense/grid_resolve_us/Q={N_QUERIES}", us_grid,
+                 "SaveAt(ts=Q-grid) re-integration"))
+    rows.append(("event_dense/dense_eval_speedup", us_grid / max(us_dense, 1),
+                 "grid_us / dense_us (>1 = dense wins)"))
+
+    native_fn = jax.jit(_native_event)
+    us_native = time_fn(native_fn, params, z0)
+    # stop-and-restart is a Python loop of separate solves — time it whole
+    # (jit applies per inner solve; the loop structure is the cost).
+    us_restart = time_fn(_restart_event, params, z0, warmup=1, iters=3)
+    t_native = float(native_fn(params, z0))
+    t_restart = float(_restart_event(params, z0))
+    t_exact = math.log(z0[0].item() / 0.5) / ALPHA
+    rows.append(("event_dense/event_native_us", us_native,
+                 f"t_event={t_native:.5f} (exact {t_exact:.5f})"))
+    rows.append(("event_dense/event_restart_us", us_restart,
+                 f"t_event={t_restart:.5f} (naive loop)"))
+    rows.append(("event_dense/event_speedup", us_restart / max(us_native, 1),
+                 "restart_us / native_us (>1 = native wins)"))
+    rows.append(("event_dense/event_time_err", abs(t_native - t_exact),
+                 "native event time vs analytic"))
+    return rows

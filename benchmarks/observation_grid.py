@@ -20,7 +20,8 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ALF, ConstantSteps, MALI, Naive, SaveAt, solve)
+from repro.core import (ALF, AdaptiveController, ConstantSteps, MALI, Naive,
+                        SaveAt, solve)
 
 from .common import Row, mlp_field, mlp_field_init, time_fn
 
@@ -98,4 +99,14 @@ def run() -> List[Row]:
         growth = series[-1] / max(series[0], 1)
         rows.append((f"obs_grid/residual_growth_2to16/{method}", growth,
                      "flat~1 expected for mali; ~n_steps for naive"))
+
+    # Per-step record of the same problem, sized through the documented
+    # Solution accessors (num_steps/step_mask) rather than ad-hoc
+    # n_accepted arithmetic on the padded buffer.
+    sol = solve(mlp_field, params, z0, 0.0, 1.0, solver=ALF(),
+                controller=AdaptiveController(1e-3, 1e-4, 256),
+                saveat=SaveAt(steps=True))
+    rows.append(("obs_grid/step_record_live_rows", int(jnp.sum(sol.step_mask)),
+                 f"num_steps={int(sol.num_steps)},"
+                 f"span_complete={bool(sol.stats.span_complete)}"))
     return rows

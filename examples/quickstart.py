@@ -115,3 +115,33 @@ rel = abs(float(g_mali["alpha"]) - float(g_naive["alpha"])) / abs(
     float(g_naive["alpha"]))
 print(f"reverse-accuracy invariant |mali-naive|/|naive| = {rel:.2e} "
       "(float rounding)")
+
+# ---- 5. time as a first-class axis --------------------------------------
+from repro.core import Event  # noqa: E402  (demo-local import)
+
+# reverse-time solve: run the flow backwards and recover z0
+zT = solve(f, params, z0, 0.0, T, solver=ALF(),
+           controller=ConstantSteps(16), gradient=MALI()).ys
+z_back = solve(f, params, zT, T, 0.0, solver=ALF(),
+               controller=ConstantSteps(16), gradient=MALI()).ys
+print(f"reverse-time roundtrip: z0 {float(z0):.6f} -> recovered "
+      f"{float(z_back):.6f}")
+
+# dense output: one solve, query anywhere in the span
+dense = solve(f, params, z0, 0.0, T, solver=ALF(),
+              controller=AdaptiveController(1e-4, 1e-5, 256),
+              saveat=SaveAt(dense=True))
+queries = jnp.asarray([0.21, 0.5, 0.83])
+vals = dense.evaluate(queries)
+print("dense evaluate:", [f"{float(v):.5f}" for v in vals],
+      "vs analytic", [f"{1.3 * math.exp(0.5 * float(t)):.5f}"
+                      for t in queries])
+
+# terminating event: stop when z grows through 2.0 (analytic t*)
+ev = Event(lambda z, t: z - 2.0, direction=+1)
+sol = solve(f, params, z0, 0.0, 4.0, solver=ALF(),
+            controller=ConstantSteps(64), gradient=MALI(), event=ev)
+t_star = math.log(2.0 / 1.3) / 0.5
+print(f"event fired={bool(sol.stats.event_fired)} at "
+      f"t={float(sol.stats.event_time):.5f} (analytic {t_star:.5f}); "
+      f"z(t_event)={float(sol.ys):.5f}")

@@ -15,9 +15,11 @@ from .alf import (alf_inverse, alf_step, alf_step_with_error, init_velocity,
                   tree_add, tree_scale, tree_sub, tree_zeros_like)
 from .api import (METHODS, mali_forward_stats, odeint, odeint_aca,
                   odeint_adjoint, odeint_mali, odeint_naive)
+from .dense import DenseInterpolation
 from .integrate import (as_time_grid, integrate_adaptive_grid,
-                        integrate_fixed_grid, integrate_grid, integrate_span)
-from .interface import (Batching, GradientMethod, Lockstep, PerSample,
+                        integrate_fixed_grid, integrate_grid, integrate_span,
+                        validate_span)
+from .interface import (Batching, Event, GradientMethod, Lockstep, PerSample,
                         RunStats, SaveAt, Sharded, Solution, Stats,
                         batch_size)
 from .ode_block import OdeSettings, ode_block
@@ -35,7 +37,8 @@ __all__ = [
     # ALF primitives
     "alf_step", "alf_inverse", "alf_step_with_error", "init_velocity",
     # composable API
-    "solve", "Solution", "SaveAt", "Stats", "RunStats",
+    "solve", "Solution", "SaveAt", "Stats", "RunStats", "Event",
+    "DenseInterpolation",
     "Batching", "Lockstep", "PerSample", "Sharded", "batch_size",
     "GradientMethod", "MALI", "Naive", "ACA", "Backsolve", "Adjoint",
     "Solver", "RungeKutta", "ALF", "ButcherTableau",
@@ -46,7 +49,7 @@ __all__ = [
     "mali_forward_stats", "METHODS", "SOLVERS", "get_solver",
     "OdeSettings", "ode_block",
     # drivers / tree utils
-    "as_time_grid", "integrate_grid", "integrate_span",
+    "as_time_grid", "validate_span", "integrate_grid", "integrate_span",
     "integrate_fixed_grid", "integrate_adaptive_grid",
     "tree_add", "tree_sub", "tree_scale", "tree_zeros_like",
 ]

@@ -114,7 +114,11 @@ class ACA(GradientMethod):
     Under ``solve(batching=PerSample())`` the checkpoint buffer and the
     recorded (t_i, h_i) replay script gain a leading batch row, so the
     backward sweep re-plays each sample's own accepted steps — per-row
-    step counts differ, the masked scan pads the shorter rows."""
+    step counts differ, the masked scan pads the shorter rows.
+
+    The replay script is *signed*: a reverse-time solve checkpoints steps
+    with negative h_i and the backward sweep re-plays each checkpointed
+    step with exactly that h_i, so gradients are direction-agnostic."""
 
     name = "aca"
 

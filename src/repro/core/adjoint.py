@@ -125,7 +125,14 @@ class Backsolve(GradientMethod):
     Under ``solve(batching=PerSample())`` the backward's reverse-time
     augmented IVP is itself integrated with per-row adaptive control (the
     vmapped masked scan), so each sample's reverse solve converges on its
-    own schedule — including the backward pass's f-eval budget."""
+    own schedule — including the backward pass's f-eval budget.
+
+    Direction: each backward segment integrates ts[k+1] -> ts[k], whatever
+    their order — for a reverse-time *forward* solve (descending ts) the
+    adjoint IVP therefore runs in ascending time; the span driver is
+    sign-agnostic so both cases share one code path. Thm 2.1's drift
+    argument applies symmetrically: the re-derived trajectory is a fresh
+    numerical solution either way."""
 
     name = "adjoint"
 

@@ -4,7 +4,9 @@
 is kept behavior-preserving: it builds the corresponding
 Solver / StepController / GradientMethod / SaveAt objects and returns
 ``Solution.ys`` (see :mod:`repro.core.solve` for the object API and
-``Solution.stats``). New code should call :func:`repro.core.solve.solve`.
+``Solution.stats``). New code should call :func:`repro.core.solve.solve` —
+calling this facade emits a ``DeprecationWarning`` (silent by default
+outside test runners; filter or migrate).
 
 Unlike the historical facade, inapplicable kwargs are no longer silently
 dropped: passing ``eta`` to a non-ALF configuration or ``fused_bwd`` to a
@@ -87,6 +89,12 @@ def odeint(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
         traj = odeint(f, params, z0, ts=jnp.linspace(0.0, 1.0, 8),
                       method="mali", n_steps=4)      # traj: (8, *z0.shape)
     """
+    warnings.warn(
+        "odeint() is a legacy string-keyed facade; use repro.core.solve() "
+        "with Solver/StepController/GradientMethod/SaveAt objects (see the "
+        "README migration table) — it additionally exposes Solution.stats, "
+        "reverse-time spans, dense output and terminating events",
+        DeprecationWarning, stacklevel=2)
     if method not in _DEFAULT_SOLVER:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
     solver_name = solver or _DEFAULT_SOLVER[method]

@@ -1,0 +1,237 @@
+"""Dense output: per-step cubic-Hermite interpolation + event location.
+
+``solve(..., saveat=SaveAt(dense=True))`` records, for every accepted
+solver step, enough endpoint data to build a cubic Hermite interpolant over
+that step; :class:`DenseInterpolation` packages the fitted polynomial
+coefficients as a pytree (jit/vmap/grad-safe) and evaluates them at
+arbitrary query times — ``Solution.evaluate(t)`` delegates here. The same
+machinery backs terminating events: :func:`locate_event` scans the recorded
+step sequence for a sign change of the event function at the step nodes and
+refines the crossing time by bisection *on the interpolant* (no extra
+``f`` evaluations per bisection iteration).
+
+Direction-awareness: all searches are done in ``sign(t1 - t0)``-reflected
+coordinates, so a reverse-time solve (``t1 < t0``, negative step sizes)
+interpolates and locates events exactly like a forward one.
+
+Where the endpoint data comes from is the solver's business
+(:meth:`repro.core.solvers.Solver.interpolant`): Runge-Kutta solvers
+re-evaluate ``f`` at the recorded step endpoints (numerically identical to
+the FSAL stage pair, one batched ``vmap`` per buffer rather than per step),
+while ALF reads the slope off the tracked velocity ``v`` of its augmented
+state — zero extra evaluations.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_tm = jax.tree_util.tree_map
+
+Pytree = Any
+
+
+def hermite_coefficients(y0: Pytree, d0: Pytree, y1: Pytree, d1: Pytree,
+                         hs: jax.Array) -> Tuple[Pytree, ...]:
+    """Fit the cubic Hermite polynomial per recorded step.
+
+    Inputs carry a leading step axis (``bound``). On the normalized step
+    coordinate ``s = (t - t_i) / h_i`` in [0, 1] the cubic through
+    ``(y0, d0)`` and ``(y1, d1)`` is ``c0 + s*(c1 + s*(c2 + s*c3))`` with::
+
+        c0 = y0
+        c1 = h * d0
+        c2 = 3*(y1 - y0) - h*(2*d0 + d1)
+        c3 = -2*(y1 - y0) + h*(d0 + d1)
+
+    Returns the ``(c0, c1, c2, c3)`` pytrees. ``h`` is the *signed* step
+    size — the signs cancel between ``h*d`` and the normalization, so the
+    identical formula serves both integration directions.
+    """
+    def per_leaf(a0, b0, a1, b1):
+        h = hs.reshape(hs.shape + (1,) * (a0.ndim - 1)).astype(a0.dtype)
+        dy = a1 - a0
+        return (a0,
+                h * b0,
+                3.0 * dy - h * (2.0 * b0 + b1),
+                -2.0 * dy + h * (b0 + b1))
+
+    fitted = _tm(lambda *xs: per_leaf(*xs), y0, d0, y1, d1)
+    # transpose: pytree-of-4-tuples -> 4 pytrees
+    outer = jax.tree_util.tree_structure(y0)
+    inner = jax.tree_util.tree_structure((0, 0, 0, 0))
+    return jax.tree_util.tree_transpose(outer, inner, fitted)
+
+
+class DenseInterpolation(NamedTuple):
+    """Piecewise-cubic dense output over one integration span (a pytree).
+
+    ``t0s``/``hs`` are the recorded accepted-step start times and *signed*
+    step sizes (rows ``>= num_steps`` are dead padding); ``c0..c3`` hold the
+    per-step Hermite coefficients with the same leading ``bound`` axis.
+    Evaluation clamps queries into ``[t_start, t_end]`` (sign-aware), so
+    the interpolant never extrapolates.
+    """
+    t0s: jax.Array          # (bound,) accepted step start times
+    hs: jax.Array           # (bound,) signed accepted step sizes
+    c0: Pytree              # (bound, ...) Hermite coefficients
+    c1: Pytree
+    c2: Pytree
+    c3: Pytree
+    num_steps: jax.Array    # int32: live rows
+    t_start: jax.Array      # span start (== solve's t0)
+    t_end: jax.Array        # span end   (== solve's t1)
+
+    @property
+    def direction(self) -> jax.Array:
+        """+1 for a forward-time span, -1 for reverse-time."""
+        return jnp.where(self.t_end >= self.t_start, 1.0, -1.0).astype(
+            self.t0s.dtype)
+
+    def evaluate(self, t) -> Pytree:
+        """Interpolate the state at query time(s) ``t``.
+
+        Vectorized over ``t``: a scalar query returns one state pytree, a
+        (Q,)-shaped query returns states with a leading Q axis. Queries are
+        clamped into the integration span.
+        """
+        t = jnp.asarray(t, self.t0s.dtype)
+        scalar = (t.ndim == 0)
+        tq = jnp.atleast_1d(t)
+        lo = jnp.minimum(self.t_start, self.t_end)
+        hi = jnp.maximum(self.t_start, self.t_end)
+        tq = jnp.clip(tq, lo, hi)
+
+        # Locate the covering step in direction-reflected (ascending)
+        # coordinates; dead padding rows sort to +inf so they are never hit.
+        sgn = self.direction
+        bound = self.t0s.shape[0]
+        live = jnp.arange(bound) < self.num_steps
+        keys = jnp.where(live, self.t0s * sgn, jnp.inf)
+        j = jnp.searchsorted(keys, tq * sgn, side="right") - 1
+        j = jnp.clip(j, 0, jnp.maximum(self.num_steps - 1, 0))
+
+        h = self.hs[j]
+        s = (tq - self.t0s[j]) / jnp.where(h == 0, 1.0, h)
+
+        def horner(a0, a1, a2, a3):
+            sb = s.reshape(s.shape + (1,) * (a0.ndim - 1)).astype(a0.dtype)
+            return a0[j] + sb * (a1[j] + sb * (a2[j] + sb * a3[j]))
+
+        out = _tm(horner, self.c0, self.c1, self.c2, self.c3)
+        return _tm(lambda b: b[0], out) if scalar else out
+
+    def __call__(self, t) -> Pytree:
+        return self.evaluate(t)
+
+
+def build_interpolation(solver, f, params, states: Pytree, state_end: Pytree,
+                        ts: jax.Array, hs: jax.Array, n_live: jax.Array,
+                        t_start, t_end) -> DenseInterpolation:
+    """Fit the per-step Hermite record from one ``record_states=True`` run.
+
+    ``states`` is the (bound, ...) buffer of accepted-step start *solver*
+    states, ``state_end`` the final solver state; the solver supplies the
+    endpoint values/slopes (:meth:`Solver.interpolant`).
+    """
+    y0, d0, y1, d1 = solver.interpolant(f, params, states, state_end,
+                                        ts, hs, n_live)
+    c0, c1, c2, c3 = hermite_coefficients(y0, d0, y1, d1, hs)
+    dtype = ts.dtype
+    return DenseInterpolation(
+        t0s=ts, hs=hs, c0=c0, c1=c1, c2=c2, c3=c3,
+        num_steps=jnp.asarray(n_live, jnp.int32),
+        t_start=jnp.asarray(t_start, dtype), t_end=jnp.asarray(t_end, dtype))
+
+
+def shift_to_step_ends(states: Pytree, state_end: Pytree,
+                       n_live: jax.Array) -> Pytree:
+    """Per-step *end* states from the start-state buffer: row i of the
+    result is the start of step i+1, with the final state placed at the
+    last live row (rows past ``n_live`` are dead padding)."""
+    last = jnp.maximum(n_live - 1, 0)
+    return _tm(
+        lambda b, e: jnp.concatenate([b[1:], b[:1]], 0).at[last].set(e),
+        states, state_end)
+
+
+def pad_dead_rows(buf: Pytree, fill: Pytree, n_live: jax.Array) -> Pytree:
+    """Replace dead padding rows (index >= n_live) with ``fill`` so that
+    downstream ``f`` evaluations and event functions never see the zero
+    padding (which may be outside f's domain)."""
+    def per_leaf(b, e):
+        live = (jnp.arange(b.shape[0]) < n_live).reshape(
+            (b.shape[0],) + (1,) * e.ndim)
+        return jnp.where(live, b, e[None])
+
+    return _tm(per_leaf, buf, fill)
+
+
+# ---------------------------------------------------------------------------
+# Event location
+# ---------------------------------------------------------------------------
+
+def locate_event(interp: DenseInterpolation, cond_fn: Callable,
+                 direction: int, max_bisections: int,
+                 t_fallback) -> Tuple[jax.Array, jax.Array]:
+    """Find the first root of ``cond_fn(z(t), t)`` along the interpolant.
+
+    Scans the recorded step nodes for a sign change (filtered by
+    ``direction``: +1 rising only, -1 falling only, 0 either), then bisects
+    on the dense interpolant inside the bracketing step — each iteration
+    costs one polynomial evaluation, zero dynamics evaluations. Returns
+    ``(t_event, fired)``; when no crossing exists ``t_event == t_fallback``
+    (the span end) and ``fired`` is False. Everything here runs on
+    non-differentiated values — the caller freezes ``t_event``.
+    """
+    bound = interp.t0s.shape[0]
+    live = jnp.arange(bound) < interp.num_steps
+    node_t0 = interp.t0s
+    node_t1 = interp.t0s + interp.hs
+
+    def cond_at(tq):
+        return jnp.asarray(cond_fn(interp.evaluate(tq), tq))
+
+    g0 = jax.vmap(cond_at)(node_t0)
+    # Step i's end node IS step i+1's start node (the interpolant is C0
+    # there by construction), so reuse g0 shifted by one instead of a
+    # second full vmapped evaluation pass; only the last live step's end
+    # (the span end) needs a fresh evaluation.
+    g_end = cond_at(interp.t_end)
+    last = jnp.maximum(interp.num_steps - 1, 0)
+    g1 = jnp.concatenate([g0[1:], g0[:1]]).at[last].set(g_end)
+
+    rising = (g0 < 0) & (g1 >= 0)
+    falling = (g0 > 0) & (g1 <= 0)
+    if direction > 0:
+        crossed = rising
+    elif direction < 0:
+        crossed = falling
+    else:
+        crossed = rising | falling
+    crossed = crossed & live
+
+    fired = jnp.any(crossed)
+    j = jnp.argmax(crossed)  # first live crossing (argmax of bool = first True)
+
+    t_lo0, t_hi0 = node_t0[j], node_t1[j]
+    g_lo0 = g0[j]
+
+    def body(_, carry):
+        t_lo, t_hi, g_lo = carry
+        mid = 0.5 * (t_lo + t_hi)
+        g_mid = cond_at(mid)
+        same = jnp.sign(g_mid) == jnp.sign(g_lo)
+        return (jnp.where(same, mid, t_lo),
+                jnp.where(same, t_hi, mid),
+                jnp.where(same, g_mid, g_lo))
+
+    t_lo, t_hi, _ = lax.fori_loop(0, max_bisections, body,
+                                  (t_lo0, t_hi0, g_lo0))
+    t_event = 0.5 * (t_lo + t_hi)
+    t_event = jnp.where(fired, t_event,
+                        jnp.asarray(t_fallback, t_event.dtype))
+    return t_event, fired

@@ -69,8 +69,10 @@ def tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
 
 def as_time_grid(ts) -> jax.Array:
     """Validate/convert an observation grid: 1-D, at least two timepoints,
-    strictly monotonic (checked when the values are concrete — inside a
-    trace the structural checks still apply)."""
+    strictly monotonic — *either direction*: an increasing grid is a
+    forward-time solve, a decreasing one a reverse-time solve (checked when
+    the values are concrete — inside a trace the structural checks still
+    apply)."""
     grid = jnp.asarray(ts, jnp.float32)
     if grid.ndim != 1 or grid.shape[0] < 2:
         raise ValueError("ts must be a 1-D grid of at least 2 timepoints "
@@ -84,15 +86,31 @@ def as_time_grid(ts) -> jax.Array:
     return grid
 
 
+def validate_span(t0, t1) -> None:
+    """Reject an empty integration span when both endpoints are concrete
+    (``t1 < t0`` is legal — it selects reverse-time integration; only
+    ``t0 == t1`` is degenerate). Traced endpoints pass through — the
+    drivers themselves are span-sign-agnostic."""
+    if isinstance(t0, jax.core.Tracer) or isinstance(t1, jax.core.Tracer):
+        return
+    if float(t0) == float(t1):
+        raise ValueError(
+            f"empty integration span: t0 == t1 == {float(t0)}; pass t1 > t0 "
+            "for a forward solve or t1 < t0 for a reverse-time solve")
+
+
 def scalar_time_grid(t0, t1) -> jax.Array:
-    """The length-1 observation grid [t0, t1] backing the scalar odeint path."""
+    """The length-1 observation grid [t0, t1] backing the scalar odeint
+    path (either direction: t1 < t0 integrates in reverse time)."""
     return jnp.stack([jnp.asarray(t0, jnp.float32),
                       jnp.asarray(t1, jnp.float32)])
 
 
 def fixed_grid_times(t0: jax.Array, t1: jax.Array, n_steps: int):
     """(t_i, h) for a uniform grid; forward and backward passes must use the
-    *identical* arithmetic (t_i = t0 + i*h) for MALI's exact reconstruction."""
+    *identical* arithmetic (t_i = t0 + i*h) for MALI's exact reconstruction.
+    ``h`` is signed — ``t1 < t0`` yields negative steps and the same
+    formula drives reverse-time integration."""
     h = (t1 - t0) / n_steps
     ts = t0 + h * jnp.arange(n_steps, dtype=jnp.result_type(t0, t1, float))
     return ts, h
@@ -150,6 +168,10 @@ class GridResult(NamedTuple):
     n_accepted: jax.Array    # (T-1,) int32 accepted steps per segment
     n_trials: jax.Array      # int32 total trial count (= accepted + rejected)
     state_traj: Optional[Pytree]  # (T-1, bound, ...) per-step start states
+    # bool: every segment reached its end time within the controller's
+    # trial budget (an exhausted AdaptiveController max_steps budget
+    # truncates the integration silently — this flag is how callers tell).
+    completed: jax.Array = jnp.asarray(True)
 
 
 class SpanResult(NamedTuple):
@@ -168,6 +190,7 @@ class AdaptiveResult(NamedTuple):
     n_evals: jax.Array       # int32 trial count (= f-eval multiplier)
     state_traj: Optional[Pytree]  # per-accepted-step start states (if recorded)
     h_final: jax.Array       # controller's step proposal at exit (warm start)
+    done: jax.Array = jnp.asarray(True)  # bool: reached t1 within budget
 
 
 def integrate_adaptive(
@@ -197,6 +220,10 @@ def integrate_adaptive(
 
     def body(carry, _):
         state, t, h, done, n_acc, n_ev, ts, hs, traj = carry
+        # Direction-sign-agnostic throughout: h and remaining carry the
+        # span's sign (negative for reverse time), every magnitude
+        # comparison goes through abs, and end-clipping assigns the signed
+        # remainder — so one loop serves both integration directions.
         remaining = t1 - t
         is_last = jnp.abs(h) >= jnp.abs(remaining)
         h_eff = jnp.where(is_last, remaining, h)
@@ -226,7 +253,10 @@ def integrate_adaptive(
             jnp.asarray(0, jnp.int32), ts_buf, hs_buf, traj_buf)
     (state, t, h, done, n_acc, n_ev, ts, hs, traj), _ = lax.scan(
         body, init, None, length=max_steps)
-    return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj, h)
+    # A zero-length span is complete by construction (the first trial's
+    # h_eff == 0 step accepts and sets done).
+    return AdaptiveResult(state, ts, hs, n_acc, n_ev, traj, h,
+                          done | (t0 == t1))
 
 
 def _constant_grid(trial: TrialFn, state0: Pytree, ts: jax.Array, n: int,
@@ -271,14 +301,15 @@ def _adaptive_grid(trial: TrialFn, state0: Pytree, ts: jax.Array,
                                  rtol=controller.rtol, atol=controller.atol,
                                  max_steps=controller.max_steps, h0=h0,
                                  record_states=record_states)
-        ys = (out.state, out.ts, out.hs, out.n_accepted, out.state_traj)
+        ys = (out.state, out.ts, out.hs, out.n_accepted, out.state_traj,
+              out.done)
         return (out.state, n_ev + out.n_evals, out.h_final), ys
 
     carry0 = (state0, jnp.asarray(0, jnp.int32), h_start)
-    (stateT, n_ev, _), (tail, seg_ts, seg_hs, seg_acc, seg_traj) = lax.scan(
-        seg, carry0, segment_pairs(ts))
+    (stateT, n_ev, _), (tail, seg_ts, seg_hs, seg_acc, seg_traj,
+                        seg_done) = lax.scan(seg, carry0, segment_pairs(ts))
     return GridResult(stateT, prepend_row(state0, tail), seg_ts, seg_hs,
-                      seg_acc, n_ev, seg_traj)
+                      seg_acc, n_ev, seg_traj, jnp.all(seg_done))
 
 
 def integrate_grid(

@@ -17,17 +17,23 @@ controller axes:
   pass emits (threaded through the custom_vjp primal as integer outputs
   whose cotangents are ignored).
 * :class:`Stats` / :class:`Solution` / :class:`SaveAt` — the user-facing
-  result types of :func:`repro.core.solve.solve`.
+  result types of :func:`repro.core.solve.solve`; :class:`Solution` is a
+  callable-in-time record when dense output was requested
+  (``Solution.evaluate(t)``).
+* :class:`Event` — a terminating event (stop at a sign change of
+  ``cond_fn(z, t)``, bisection-refined on the dense interpolant).
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .dense import DenseInterpolation
 
 Pytree = Any
 
@@ -84,6 +90,18 @@ class Stats(NamedTuple):
     n_segments: int         # static: observation segments (T - 1)
     residual_bytes: int     # static: analytic residual-memory estimate
     per_sample: Optional["RunStats"] = None  # (B,) rows for batched solves
+    # Event solves (solve(..., event=Event(...))) populate these two: did
+    # the event terminate the span, and at what (bisection-refined) time.
+    # None on non-event solves.
+    event_fired: Optional[jax.Array] = None  # bool
+    event_time: Optional[jax.Array] = None   # refined t_event (== t1 if not
+                                             # fired)
+    # Span-recording solves (SaveAt(steps=True)/dense=True and the event
+    # detection pass) populate this: False when the AdaptiveController's
+    # max_steps trial budget ran out before reaching t1, i.e. the recorded
+    # span (and any dense interpolant over it) covers only a prefix of
+    # [t0, t1]. None where not tracked (plain grid/end-state solves).
+    span_complete: Optional[jax.Array] = None  # bool
 
 
 class Solution(NamedTuple):
@@ -91,13 +109,75 @@ class Solution(NamedTuple):
 
     ``ys``/``ts`` shape depends on the ``SaveAt`` mode: the end state and
     scalar ``t1`` (default), the (T, ...) trajectory over ``SaveAt.ts``, or
-    the padded dense per-step record for ``SaveAt(steps=True)`` (rows
-    ``0 .. stats.n_accepted`` are live: step-start states then the final
-    state; later rows are zero padding).
+    the padded per-step record for ``SaveAt(steps=True)``. For padded
+    records, :attr:`num_steps`/:attr:`step_mask` say which rows are live —
+    use them instead of arithmetic on ``stats.n_accepted`` (a zero-padded
+    ``ts`` row is otherwise indistinguishable from a legitimate ``t = 0.0``
+    point).
+
+    With ``SaveAt(dense=True)`` the solution is additionally *callable in
+    time*: :meth:`evaluate` interpolates the state anywhere in the
+    integration span off the recorded per-step cubic-Hermite coefficients.
+
+    Example::
+
+        sol = solve(f, params, z0, 0.0, 1.0,
+                    controller=AdaptiveController(1e-4, 1e-5),
+                    saveat=SaveAt(dense=True))
+        z_mid = sol.evaluate(0.5)                 # one state
+        zs = sol.evaluate(jnp.linspace(0., 1., 100))  # (100, ...) states
     """
     ys: Pytree
     ts: jax.Array
     stats: Stats
+    # Dense-output record (SaveAt(dense=True) / event solves); None otherwise.
+    interpolation: Optional[DenseInterpolation] = None
+    # Live-row count of a padded ys/ts buffer (SaveAt(steps=True)); None for
+    # exact-shape modes (end state / observation grid).
+    n_live: Optional[jax.Array] = None
+
+    @property
+    def num_steps(self) -> jax.Array:
+        """Accepted solver steps of the recorded trajectory; for
+        ``SaveAt(steps=True)`` the live rows are ``0 .. num_steps``
+        inclusive — the step-start states plus the final state. Derived
+        from the padded buffer's live-row count when one exists (batched
+        solves redefine ``stats.n_accepted`` as the per-row *total*, which
+        is B x the shared step count under Lockstep); equals
+        ``stats.n_accepted`` otherwise."""
+        if self.n_live is not None:
+            return self.n_live - 1
+        return self.stats.n_accepted
+
+    @property
+    def step_mask(self) -> jax.Array:
+        """Boolean mask over the rows of ``ts``/``ys``: True where the row
+        holds real data. All-True for exact-shape modes (end state,
+        ``SaveAt(ts=grid)``); for the padded ``SaveAt(steps=True)`` buffer
+        only rows ``< n_live`` are live and later rows are padding."""
+        ts = jnp.asarray(self.ts)
+        if ts.ndim == 0:
+            return jnp.ones((), bool)
+        if self.n_live is None:
+            return jnp.ones((ts.shape[0],), bool)
+        return jnp.arange(ts.shape[0]) < self.n_live
+
+    def evaluate(self, t) -> Pytree:
+        """Dense-output interpolation at query time(s) ``t`` (vectorized:
+        scalar in -> one state out, (Q,) in -> leading-Q states out).
+        Requires a solve with ``SaveAt(dense=True)``; queries are clamped
+        into the integration span. Differentiable w.r.t. params/z0 by
+        direct backprop through the recorded step sequence."""
+        if self.interpolation is None:
+            raise ValueError(
+                "Solution.evaluate(t) needs dense output: pass "
+                "saveat=SaveAt(dense=True) to solve() to record the "
+                "per-step interpolation coefficients")
+        return self.interpolation.evaluate(t)
+
+    def __call__(self, t) -> Pytree:
+        """A dense Solution is callable in time: ``sol(t) == sol.evaluate(t)``."""
+        return self.evaluate(t)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -105,27 +185,92 @@ class SaveAt:
     """What to save (diffrax-style). One mode applies per solve:
 
     * ``ts=<1-D grid>`` — the trajectory at every requested timepoint
-      (the observation-grid path; ``ys[0] == z0``);
-    * ``steps=True`` — dense per-step output: every accepted solver step's
+      (the observation-grid path; ``ys[0] == z0``); the grid may ascend or
+      descend (descending = a reverse-time solve);
+    * ``steps=True`` — raw per-step output: every accepted solver step's
       start state plus the final state, with the actual step times in
-      ``Solution.ts``. Dense output pins every intermediate state by
-      definition, so it is integrated with direct backpropagation through
-      the recorded step sequence (the memory advantage of
-      MALI/ACA/Backsolve does not exist in this mode);
+      ``Solution.ts`` as a padded buffer (``Solution.num_steps`` /
+      ``Solution.step_mask`` say which rows are live);
+    * ``dense=True`` — continuous dense output: record per-accepted-step
+      cubic-Hermite coefficients so ``Solution.evaluate(t)`` interpolates
+      the state anywhere in ``[t0, t1]``; ``ys``/``ts`` still hold the end
+      state/time;
     * otherwise ``t1`` — only the final state ``z(t1)`` (the default;
       ``t1`` is the fallback mode, so passing ``ts=grid`` overrides it and
       ``SaveAt(ts=grid)`` needs no ``t1=False``).
 
-    ``ts`` and ``steps`` are mutually exclusive.
+    ``ts``, ``steps`` and ``dense`` are mutually exclusive. ``steps`` and
+    ``dense`` pin every intermediate state by definition, so both are
+    integrated with direct backpropagation through the recorded step
+    sequence (the memory advantage of MALI/ACA/Backsolve does not exist in
+    these modes).
     """
     t1: bool = True
     ts: Optional[Any] = None
     steps: bool = False
+    dense: bool = False
 
     def __post_init__(self):
-        if self.steps and self.ts is not None:
-            raise ValueError("SaveAt: pass either ts=<grid> or steps=True, "
-                             "not both")
+        picked = [m for m, on in (("ts=<grid>", self.ts is not None),
+                                  ("steps=True", self.steps),
+                                  ("dense=True", self.dense)) if on]
+        if len(picked) > 1:
+            raise ValueError("SaveAt: pass only one of ts=<grid>, "
+                             f"steps=True or dense=True, not {picked}")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Event:
+    """Terminating event: stop the solve at a sign change of
+    ``cond_fn(z, t)`` (a scalar event function).
+
+    The integrator runs a dense-recording forward over the full span,
+    scans the accepted-step nodes for the first sign change (filtered by
+    ``direction``), refines the crossing time by ``max_bisections``
+    bisection iterations on the dense cubic-Hermite interpolant (zero
+    extra dynamics evaluations), then re-solves ``[t0, t_event]`` with the
+    chosen gradient method. Gradients flow through this frozen-``t_event``
+    path for all four methods (``t_event`` is treated as a constant — the
+    standard torchdiffeq-style event gradient convention).
+
+    * ``direction = 0`` — trigger on any sign change;
+    * ``direction = +1`` — rising crossings only (cond goes negative ->
+      non-negative);
+    * ``direction = -1`` — falling crossings only.
+
+    ``Solution.stats.event_fired`` / ``event_time`` record the outcome;
+    when no crossing exists the solve runs to ``t1`` and
+    ``event_time == t1``.
+
+    The detection pass integrates the *whole* ``[t0, t1]`` span as one
+    segment, so with :class:`~repro.core.stepsize.AdaptiveController` its
+    ``max_steps`` trial budget must cover the full span (size it for the
+    span length, not for one observation segment) — an exhausted budget
+    truncates the detection sweep before the crossing and the event
+    silently does not fire.
+
+    Example::
+
+        # stop when the first state coordinate hits 0.5
+        ev = Event(lambda z, t: z[0] - 0.5, direction=+1)
+        sol = solve(f, params, z0, 0.0, 10.0, event=ev)
+        sol.ys                      # z(t_event)
+        sol.stats.event_time        # the crossing time
+    """
+    cond_fn: Callable[[Pytree, jax.Array], jax.Array]
+    direction: int = 0
+    max_bisections: int = 32
+
+    def __post_init__(self):
+        if not callable(self.cond_fn):
+            raise TypeError(f"Event.cond_fn must be callable (z, t) -> "
+                            f"scalar, got {self.cond_fn!r}")
+        if self.direction not in (-1, 0, 1):
+            raise ValueError(f"Event.direction must be -1, 0 or +1, got "
+                             f"{self.direction!r}")
+        if not isinstance(self.max_bisections, int) or self.max_bisections < 1:
+            raise ValueError(f"Event.max_bisections must be a positive "
+                             f"integer, got {self.max_bisections!r}")
 
 
 class Batching:
@@ -172,9 +317,10 @@ class PerSample(Batching):
     name = "per_sample"
 
     def validate(self, controller, saveat) -> None:
-        if saveat is not None and saveat.steps:
+        if saveat is not None and (saveat.steps or saveat.dense):
+            mode = "steps=True" if saveat.steps else "dense=True"
             raise ValueError(
-                "SaveAt(steps=True) under PerSample() batching is ragged "
+                f"SaveAt({mode}) under PerSample() batching is ragged "
                 "(each sample accepts a different number of steps); use "
                 "SaveAt(ts=grid) for a shared observation grid, or "
                 "Lockstep() for a shared step sequence")
@@ -208,9 +354,10 @@ class Sharded(Batching):
                              "pick Lockstep() or PerSample() for inner")
 
     def validate(self, controller, saveat) -> None:
-        if saveat is not None and saveat.steps:
+        if saveat is not None and (saveat.steps or saveat.dense):
+            mode = "steps=True" if saveat.steps else "dense=True"
             raise ValueError(
-                "SaveAt(steps=True) under Sharded() batching is ragged "
+                f"SaveAt({mode}) under Sharded() batching is ragged "
                 "across shards (each shard's controller accepts its own "
                 "step count); use SaveAt(ts=grid) or an unsharded "
                 "Lockstep() solve")

@@ -237,6 +237,12 @@ class MALI(GradientMethod):
 
     name = "mali"
 
+    # Time direction: the recorded (t_i, h_i) replay buffers are *signed* —
+    # a reverse-time solve (t1 < t0, h_i < 0) records negative steps and
+    # the backward sweep's psi^-1 reconstruction runs with the same signed
+    # h, so ALF's inverse is exercised in both directions and gradients of
+    # a reverse solve match the time-reflected forward solve.
+
     def default_solver(self) -> ALF:
         return ALF()
 

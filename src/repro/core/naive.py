@@ -38,7 +38,9 @@ class Naive(GradientMethod):
     the memory-hungry oracle every memory-efficient method is checked
     against. Under ``solve(batching=PerSample())`` it is vmapped row-wise
     like every other method, which makes it the gradient oracle for the
-    batched drivers too (per-row adaptive loops included)."""
+    batched drivers too (per-row adaptive loops included). Reverse-time
+    spans differentiate through the identical sign-agnostic driver, so
+    naive is the oracle for both integration directions."""
 
     name = "naive"
 

@@ -37,11 +37,17 @@ _METHODS = ("mali", "naive", "aca", "adjoint")
 
 @dataclasses.dataclass(frozen=True)
 class OdeSettings:
-    """Integrator settings carried by model configs (hashable/static)."""
+    """Integrator settings carried by model configs (hashable/static).
+
+    ``t0``/``t1`` bound the integration span; ``t0 > t1`` expresses a
+    *reverse-time* block (the invertible-flow direction MALI's backward
+    pass exercises) straight from a model config.
+    """
     mode: str = "off"          # 'off' | 'per_block'
     method: str = "mali"       # gradient method
     solver: str = "alf"
     n_steps: int = 2           # 0 = adaptive
+    t0: float = 0.0            # span start (t0 > t1 = reverse-time block)
     t1: float = 1.0
     eta: float = 1.0           # ALF damping
     rtol: float = 1e-2
@@ -71,8 +77,15 @@ class OdeSettings:
         if self.rtol < 0.0 or self.atol < 0.0:
             raise ValueError(f"ode tolerances must be non-negative, got "
                              f"rtol={self.rtol}, atol={self.atol}")
+        if not math.isfinite(self.t0):
+            raise ValueError(f"ode.t0 must be finite, got {self.t0}")
         if not math.isfinite(self.t1):
             raise ValueError(f"ode.t1 must be finite, got {self.t1}")
+        if self.t0 == self.t1:
+            raise ValueError(
+                f"ode.t0 == ode.t1 == {self.t1} is an empty integration "
+                "span; use t1 > t0 for a forward block or t0 > t1 for a "
+                "reverse-time block")
         if self.solver == "alf":
             check_eta(self.eta)
         if self.obs_times is not None and len(self.obs_times) < 2:
@@ -99,15 +112,16 @@ def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],
               settings: OdeSettings) -> Callable[[Pytree, Pytree], Pytree]:
     """Wrap ``dynamics(params, z, t)`` into ``apply(params, x)``.
 
-    Returns ``z(t1)`` (same structure as ``x``), or — when
+    Returns ``z(t1)`` integrated from ``settings.t0`` (same structure as
+    ``x``; ``t0 > t1`` runs the block in reverse time), or — when
     ``settings.obs_times`` is set — the trajectory pytree with leading axis
     ``len(obs_times)`` from a single native observation-grid integration.
     """
     solver, controller, gradient, saveat = settings.as_objects()
 
     def apply(params: Pytree, x: Pytree) -> Pytree:
-        return solve(dynamics, params, x, 0.0, settings.t1, solver=solver,
-                     controller=controller, gradient=gradient,
+        return solve(dynamics, params, x, settings.t0, settings.t1,
+                     solver=solver, controller=controller, gradient=gradient,
                      saveat=saveat).ys
 
     return apply

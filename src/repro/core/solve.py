@@ -51,11 +51,14 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from .aca import ACA
 from .adjoint import Adjoint, Backsolve
-from .integrate import as_time_grid, integrate_grid, scalar_time_grid
-from .interface import (Batching, GradientMethod, Lockstep, PerSample,
+from .dense import build_interpolation, locate_event
+from .integrate import (as_time_grid, integrate_grid, scalar_time_grid,
+                        validate_span)
+from .interface import (Batching, Event, GradientMethod, Lockstep, PerSample,
                         RunStats, SaveAt, Sharded, Solution, Stats,
                         batch_size, make_run_stats, state_nbytes)
 from .mali import MALI
@@ -86,23 +89,43 @@ def _build_stats(rstats: RunStats, gradient: GradientMethod, z0: Pytree,
     )
 
 
-def _solve_dense(f, params, z0, t0, t1, solver, controller,
-                 gradient) -> Solution:
-    """SaveAt(steps=True): record every accepted step of the single
-    [t0, t1] segment. Dense output pins each intermediate state by
-    definition, so gradients flow by direct backprop through the recorded
-    sequence (there is nothing for a memory-efficient method to save)."""
+def _check_direct_backprop(solver: Solver, mode: str) -> None:
     if isinstance(solver, ALF) and solver.backend == "pallas":
         raise ValueError(
-            "SaveAt(steps=True) backpropagates directly through the "
-            "recorded step sequence, which the Pallas ALF kernel does not "
-            "support in interpret mode; use ALF(backend='reference') for "
-            "dense output")
+            f"{mode} backpropagates directly through the recorded step "
+            "sequence, which the Pallas ALF kernel does not support in "
+            "interpret mode; use ALF(backend='reference') for per-step "
+            "recording")
+
+
+def _record_span(f, params, z0, t0, t1, solver, controller):
+    """One state-recording integration over the single [t0, t1] segment
+    (the shared forward of SaveAt(steps=True), SaveAt(dense=True) and the
+    event-detection pass). Works in both time directions."""
     grid = scalar_time_grid(t0, t1)
     state0 = solver.init_state(f, params, z0, grid[0])
     trial = solver.trial_fn(f, params, controller)
     res = integrate_grid(trial, state0, grid, controller=controller,
                          order=solver.order, record_states=True)
+    return grid, res
+
+
+def _span_interpolation(f, params, solver, grid, res):
+    """Fit the dense cubic-Hermite record of one recorded span."""
+    states = _tm(lambda b: b[0], res.state_traj)
+    return build_interpolation(solver, f, params, states, res.state,
+                               res.ts[0], res.hs[0], res.n_accepted[0],
+                               grid[0], grid[-1])
+
+
+def _solve_dense(f, params, z0, t0, t1, solver, controller,
+                 gradient) -> Solution:
+    """SaveAt(steps=True): record every accepted step of the single
+    [t0, t1] segment. Per-step output pins each intermediate state by
+    definition, so gradients flow by direct backprop through the recorded
+    sequence (there is nothing for a memory-efficient method to save)."""
+    _check_direct_backprop(solver, "SaveAt(steps=True)")
+    grid, res = _record_span(f, params, z0, t0, t1, solver, controller)
 
     n_acc = res.n_accepted[0]
     starts = solver.output(_tm(lambda b: b[0], res.state_traj))  # (bound, ...)
@@ -122,6 +145,99 @@ def _solve_dense(f, params, z0, t0, t1, solver, controller,
                             init_evals)
     # Dense residuals = the recorded buffer itself.
     stats = _build_stats(rstats, Naive(), z0, grid, solver, controller)
+    stats = stats._replace(span_complete=res.completed)
+    # Live rows: the n_acc step-start states plus the endpoint row.
+    return Solution(ys=ys, ts=ts_out, stats=stats, n_live=n_acc + 1)
+
+
+def _solve_dense_interp(f, params, z0, t0, t1, solver, controller,
+                        gradient) -> Solution:
+    """SaveAt(dense=True): record the span and fit the per-accepted-step
+    cubic-Hermite interpolant, making ``Solution.evaluate(t)`` live.
+    Like steps=True, continuous output pins every intermediate state, so
+    gradients (through ``ys`` *and* through ``evaluate``'s interpolated
+    values) flow by direct backprop through the recorded sequence."""
+    _check_direct_backprop(solver, "SaveAt(dense=True)")
+    grid, res = _record_span(f, params, z0, t0, t1, solver, controller)
+    interp = _span_interpolation(f, params, solver, grid, res)
+
+    init_evals = ((1 if isinstance(solver, ALF) else 0)
+                  + solver.interpolant_fevals(controller.step_bound))
+    rstats = make_run_stats(res.n_accepted, res.n_trials, solver.stages,
+                            init_evals)
+    stats = _build_stats(rstats, Naive(), z0, grid, solver, controller)
+    stats = stats._replace(span_complete=res.completed)
+    return Solution(ys=solver.output(res.state), ts=grid[-1], stats=stats,
+                    interpolation=interp)
+
+
+def _solve_event(f, params, z0, t0, t1, solver, controller, gradient,
+                 saveat, event: Event) -> Solution:
+    """Terminating-event solve: dense-record the full span on frozen
+    (stop-gradient) inputs, locate/refine the first crossing of
+    ``event.cond_fn`` on the interpolant, then re-solve ``[t0, t_event]``
+    with the chosen gradient method — the frozen-``t_event`` gradient path
+    every method supports (``t_event`` is a constant of the re-solve, so
+    MALI replays/reconstructs, ACA checkpoints and Backsolve re-integrates
+    exactly as in a plain solve)."""
+    if saveat.steps or saveat.dense:
+        raise ValueError(
+            "SaveAt(steps=True)/SaveAt(dense=True) with event= is not "
+            "supported: the per-step record would mix pre- and post-event "
+            "steps of the detection pass; use SaveAt(ts=grid) (post-event "
+            "rows hold the terminal state) or the default end state")
+    trajectory = saveat.ts is not None
+    if trajectory:
+        user_grid = as_time_grid(saveat.ts)
+        t0, t1 = user_grid[0], user_grid[-1]
+
+    # Detection pass — never differentiated (inputs are stop-gradient'd),
+    # so it composes with any forward backend, and its bisection costs no
+    # dynamics evaluations (polynomial arithmetic on the interpolant).
+    p_det = lax.stop_gradient(params)
+    z_det = lax.stop_gradient(z0)
+    grid, res = _record_span(f, p_det, z_det, t0, t1, solver, controller)
+    interp = _span_interpolation(f, p_det, solver, grid, res)
+    t_event, fired = locate_event(interp, event.cond_fn, event.direction,
+                                  event.max_bisections, grid[-1])
+    t_event = lax.stop_gradient(t_event)
+
+    # Differentiable re-solve over the event-terminated span. In grid mode
+    # the observation times are clamped at t_event (sign-aware), which
+    # turns every post-event segment into a zero-length no-op — those rows
+    # of ys/ts hold the frozen terminal state/time by construction.
+    if trajectory:
+        forward = user_grid[-1] >= user_grid[0]
+        clamped = jnp.where(forward, jnp.minimum(user_grid, t_event),
+                            jnp.maximum(user_grid, t_event))
+        traj, rstats = gradient.integrate(f, params, z0, clamped, solver,
+                                          controller)
+        ys, ts_out, grid_out = traj, clamped, clamped
+    else:
+        grid_out = jnp.stack([grid[0], jnp.asarray(t_event, grid.dtype)])
+        traj, rstats = gradient.integrate(f, params, z0, grid_out, solver,
+                                          controller)
+        ys, ts_out = _tm(lambda b: b[-1], traj), grid_out[-1]
+
+    # Total accounting = re-solve + detection pass. The re-solve counters
+    # come out of a custom_vjp primal — detach before arithmetic (their
+    # instantiated float0 tangents would crash jvp tracing under
+    # vmap-of-grad otherwise).
+    det = make_run_stats(res.n_accepted, res.n_trials, solver.stages,
+                         (1 if isinstance(solver, ALF) else 0)
+                         + solver.interpolant_fevals(controller.step_bound))
+    rstats = _detached(rstats)
+    stats = Stats(
+        n_accepted=rstats.n_accepted + det.n_accepted,
+        n_rejected=rstats.n_rejected + det.n_rejected,
+        n_fevals=rstats.n_fevals + det.n_fevals,
+        n_segments=int(grid_out.shape[0]) - 1,
+        residual_bytes=gradient.residual_bytes(z0, int(grid_out.shape[0]),
+                                               solver, controller),
+        event_fired=fired,
+        event_time=t_event,
+        span_complete=res.completed,
+    )
     return Solution(ys=ys, ts=ts_out, stats=stats)
 
 
@@ -237,11 +353,20 @@ def _solve_batched(f, params, z0, t0, t1, solver, controller, gradient,
                    saveat, batching: Batching) -> Solution:
     nb = batch_size(z0)
 
-    if saveat.steps:
-        # Lockstep's shared step sequence keeps dense output rectangular;
+    if saveat.steps or saveat.dense:
+        # Lockstep's shared step sequence keeps per-step output rectangular;
         # PerSample/Sharded raggedness is rejected in Batching.validate.
-        sol = _solve_dense(f, params, z0, t0, t1, solver, controller,
-                           gradient)
+        if saveat.steps:
+            sol = _solve_dense(f, params, z0, t0, t1, solver, controller,
+                               gradient)
+            ys = _batch_first(sol.ys)
+        else:
+            # dense=True: the end state is already batch-first; the fitted
+            # interpolant carries the batch axis inside each coefficient
+            # leaf, so evaluate(t) returns (B, ...) per scalar query.
+            sol = _solve_dense_interp(f, params, z0, t0, t1, solver,
+                                      controller, gradient)
+            ys = sol.ys
         per = _broadcast_rows(
             RunStats(sol.stats.n_accepted, sol.stats.n_rejected,
                      sol.stats.n_fevals), nb)
@@ -252,8 +377,10 @@ def _solve_batched(f, params, z0, t0, t1, solver, controller, gradient,
             n_fevals=jnp.sum(per.n_fevals).astype(jnp.int32),
             n_segments=sol.stats.n_segments,
             residual_bytes=sol.stats.residual_bytes,
-            per_sample=per)
-        return Solution(ys=_batch_first(sol.ys), ts=sol.ts, stats=stats)
+            per_sample=per,
+            span_complete=sol.stats.span_complete)
+        return Solution(ys=ys, ts=sol.ts, stats=stats,
+                        interpolation=sol.interpolation, n_live=sol.n_live)
 
     trajectory = saveat.ts is not None
     grid = as_time_grid(saveat.ts) if trajectory else scalar_time_grid(t0, t1)
@@ -278,8 +405,15 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
           controller: Optional[StepController] = None,
           gradient: Optional[GradientMethod] = None,
           saveat: Optional[SaveAt] = None,
-          batching: Optional[Batching] = None) -> Solution:
+          batching: Optional[Batching] = None,
+          event: Optional[Event] = None) -> Solution:
     """Integrate ``dz/dt = f(params, z, t)`` and return a :class:`Solution`.
+
+    Time is a first-class axis: ``t1 < t0`` (or a descending ``SaveAt.ts``
+    grid) integrates in *reverse time* — the drivers carry the span's sign
+    through step clipping and error control, and every gradient method
+    replays its signed ``(t_i, h_i)`` step record, so values and gradients
+    match the time-reflected forward solve. Only ``t0 == t1`` is rejected.
 
     Arguments (all axes default to the paper's MALI configuration):
 
@@ -292,6 +426,16 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     * ``saveat`` — a :class:`~repro.core.interface.SaveAt`; defaults to the
       end state ``z(t1)``. With ``SaveAt(ts=grid)``, ``t0``/``t1`` are
       ignored and ``ys`` is the (T, ...) trajectory with ``ys[0] == z0``.
+      With ``SaveAt(dense=True)`` the returned solution is callable in
+      time: ``Solution.evaluate(t)`` interpolates anywhere in the span off
+      per-step cubic-Hermite coefficients.
+    * ``event`` — a terminating :class:`~repro.core.interface.Event`:
+      integration stops at the first sign change of ``cond_fn(z, t)``
+      (bisection-refined on the dense interpolant), ``stats.event_time`` /
+      ``stats.event_fired`` record the outcome, and in grid mode the
+      post-event rows of ``ys``/``ts`` hold the frozen terminal state.
+      Gradients flow through the frozen-``t_event`` path for all four
+      methods.
     * ``batching`` — a :class:`~repro.core.interface.Batching`, making the
       leading axis of ``z0`` an explicit batch axis: :class:`Lockstep`
       (one shared controller decision per trial — the implicit semantics
@@ -323,6 +467,19 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     saveat = SaveAt() if saveat is None else saveat
 
     gradient.validate(solver, controller)
+    if saveat.ts is None:
+        validate_span(t0, t1)
+
+    if event is not None:
+        if not isinstance(event, Event):
+            raise TypeError(f"event must be an Event, got {event!r}")
+        if batching is not None:
+            raise ValueError(
+                "event= with batching= is not supported: per-sample event "
+                "times are ragged; vmap single event solves, or solve the "
+                "batch without an event and post-process")
+        return _solve_event(f, params, z0, t0, t1, solver, controller,
+                            gradient, saveat, event)
 
     if batching is not None:
         if not isinstance(batching, Batching):
@@ -336,6 +493,9 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     if saveat.steps:
         return _solve_dense(f, params, z0, t0, t1, solver, controller,
                             gradient)
+    if saveat.dense:
+        return _solve_dense_interp(f, params, z0, t0, t1, solver,
+                                   controller, gradient)
 
     trajectory = saveat.ts is not None
     grid = as_time_grid(saveat.ts) if trajectory else scalar_time_grid(t0, t1)
@@ -346,7 +506,7 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     return Solution(ys=_tm(lambda b: b[-1], traj), ts=grid[-1], stats=stats)
 
 
-__all__ = ["solve", "Solution", "SaveAt", "Stats", "GradientMethod",
+__all__ = ["solve", "Solution", "SaveAt", "Stats", "Event", "GradientMethod",
            "Batching", "Lockstep", "PerSample", "Sharded",
            "MALI", "Naive", "ACA", "Backsolve", "Adjoint", "ALF",
            "AdaptiveController", "state_nbytes"]

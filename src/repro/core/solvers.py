@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .alf import alf_step_with_error, check_backend, check_eta, init_velocity
+from .dense import pad_dead_rows, shift_to_step_ends
 
 _tm = jax.tree_util.tree_map
 
@@ -155,6 +156,37 @@ class Solver:
     def trial_fn(self, f: Dynamics, params: Pytree, controller) -> TrialFn:
         raise NotImplementedError
 
+    def interpolant(self, f: Dynamics, params: Pytree, states: Pytree,
+                    state_end: Pytree, ts: jax.Array, hs: jax.Array,
+                    n_live: jax.Array):
+        """Per-step endpoint data ``(y0, d0, y1, d1)`` for dense output.
+
+        ``states`` is the recorded (bound, ...) buffer of accepted-step
+        start solver states, ``state_end`` the final solver state, and
+        ``ts``/``hs`` the recorded signed step times/sizes (rows past
+        ``n_live`` are padding). The default re-evaluates ``f`` at both
+        step endpoints — one batched ``vmap`` over the whole buffer, and
+        for FSAL tableaus numerically identical to the first/last stage
+        pair — while solvers whose state already carries a velocity
+        (:class:`ALF`) override this to read the slope for free. Dead
+        padding rows are backfilled with the end state so ``f`` never sees
+        the zero padding.
+        """
+        ends = shift_to_step_ends(states, state_end, n_live)
+        y0 = self.output(pad_dead_rows(states, state_end, n_live))
+        y1 = self.output(pad_dead_rows(ends, state_end, n_live))
+        eval_f = jax.vmap(lambda z, t: f(params, z, t))
+        d0 = eval_f(y0, ts)
+        d1 = eval_f(y1, ts + hs)
+        return y0, d0, y1, d1
+
+    def interpolant_fevals(self, bound: int) -> int:
+        """Dynamics evaluations :meth:`interpolant` spends over a recorded
+        buffer of ``bound`` rows (feeds ``Stats.n_fevals`` accounting on
+        the dense/event paths). The default endpoint re-evaluation costs
+        two batched passes; velocity-carrying solvers override to 0."""
+        return 2 * bound
+
 
 @dataclasses.dataclass(frozen=True)
 class RungeKutta(Solver):
@@ -234,6 +266,20 @@ class ALF(Solver):
 
         return trial
 
+    def interpolant(self, f, params, states, state_end, ts, hs, n_live):
+        """ALF dense output from the velocity pair: the augmented state
+        already tracks ``v ~ dz/dt`` at every node, so the Hermite slopes
+        come off the recorded ``(z, v)`` record with ZERO extra ``f``
+        evaluations (the property the midpoint step maintains — the same
+        ``v`` the inverse reconstruction replays)."""
+        ends = shift_to_step_ends(states, state_end, n_live)
+        z0s, v0s = pad_dead_rows(states, state_end, n_live)
+        z1s, v1s = pad_dead_rows(ends, state_end, n_live)
+        return z0s, v0s, z1s, v1s
+
+    def interpolant_fevals(self, bound: int) -> int:
+        return 0
+
 
 def Euler() -> RungeKutta:
     return RungeKutta(EULER)
@@ -281,4 +327,7 @@ def get_solver(name) -> Solver:
     try:
         return SOLVERS[name]
     except KeyError:
-        raise ValueError(f"unknown solver {name!r}; available: {sorted(SOLVERS)}")
+        raise ValueError(
+            f"unknown solver {name!r}; registered solver names: "
+            f"{', '.join(sorted(SOLVERS))} (or pass a Solver instance)") \
+            from None

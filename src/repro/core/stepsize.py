@@ -59,7 +59,11 @@ def error_ratio(err: Any, z0: Any, z1: Any, rtol: float, atol: float) -> jax.Arr
 
 
 def next_step_size(h: jax.Array, ratio: jax.Array, order: int) -> jax.Array:
-    """PI-free single-exponent controller: h * clip(safety * ratio^(-1/(p+1)))."""
+    """PI-free single-exponent controller: h * clip(safety * ratio^(-1/(p+1))).
+
+    The growth/shrink factor is strictly positive, so the *sign* of ``h``
+    (the integration direction) is invariant under step-size control —
+    reverse-time solves keep proposing negative steps."""
     ratio = jnp.maximum(ratio, 1e-10)
     factor = SAFETY * ratio ** (-1.0 / (order + 1))
     factor = jnp.clip(factor, MIN_FACTOR, MAX_FACTOR)
@@ -82,7 +86,9 @@ def clip_step_to_end(t: jax.Array, h: jax.Array, t1: jax.Array) -> jax.Array:
 
 
 def initial_step_size(rtol: float, atol: float, span: jax.Array) -> jax.Array:
-    """Cheap initial h heuristic: a small fraction of the span, tol-scaled."""
+    """Cheap initial h heuristic: a small fraction of the span, tol-scaled.
+    Signed like the span — a negative span (reverse time) proposes a
+    negative initial step."""
     base = jnp.abs(span) * 0.05
     tol_scale = jnp.clip(jnp.sqrt(rtol + atol), 1e-4, 1.0)
     return jnp.sign(span) * jnp.maximum(base * tol_scale, jnp.abs(span) * 1e-4)

@@ -1,0 +1,423 @@
+"""Time as a first-class axis: reverse-time solves, dense output, events.
+
+The paper's headline claim is *reverse accuracy* (Thm 2.1): ALF is
+invertible, so MALI's backward pass reconstructs the exact forward
+trajectory where Backsolve's reverse-time re-integration drifts. This file
+asserts that claim in-library, plus the direction/dense/event contracts of
+the time-axis redesign:
+
+* a reverse-time solve (``t1 < t0``, or a descending ``SaveAt.ts`` grid)
+  matches the time-reflected forward solve — values AND gradients — for
+  all four gradient methods and both controllers;
+* a forward solve followed by a reverse solve recovers ``z0`` to solver
+  tolerance (and exercises ALF's inverse reconstruction in both
+  directions through MALI's backward);
+* the Thm 2.1 regression: on stiff decay with the identical ALF
+  discretization, MALI's gradient matches the direct-backprop oracle to
+  float precision while Backsolve's reverse-time drift is orders of
+  magnitude larger;
+* ``Solution.evaluate(t)`` (dense cubic-Hermite output) agrees with a
+  direct ``SaveAt(ts=...)`` solve to interpolation order on a held-out
+  grid, for every method;
+* ``Event`` solves recover the analytic crossing time to bisection
+  tolerance, freeze post-event grid rows at the terminal state, and their
+  frozen-``t_event`` gradient path is finite for all four methods.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, Dopri5, Event, HeunEuler, MALI, Naive,
+                        SaveAt, solve)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+CONFIGS = {
+    "mali": (MALI(), ALF()),
+    "naive": (Naive(), ALF()),
+    "aca": (ACA(), HeunEuler()),
+    "adjoint": (Backsolve(), Dopri5()),
+}
+
+CONTROLLERS = {
+    "fixed": ConstantSteps(8),
+    "adaptive": AdaptiveController(1e-4, 1e-5, 64),
+}
+
+
+def _f(params, z, t):
+    # Non-autonomous linear decay — time-dependence makes the reflection
+    # test meaningful (an autonomous f cannot tell t from T - t).
+    return -params["a"] * z * (1.0 + 0.5 * jnp.cos(2.0 * jnp.pi * t))
+
+
+def _f_reflected(params, z, t):
+    # w(tau) = z(1 - tau) satisfies dw/dtau = -f(w, 1 - tau).
+    return -_f(params, z, 1.0 - t)
+
+
+PARAMS = {"a": jnp.float32(0.8)}
+Z0 = jnp.asarray([1.0, 0.5, 2.0], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reverse-time spans match time-reflected forward solves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ctrl_name", sorted(CONTROLLERS))
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_reverse_span_matches_reflected_forward(method, ctrl_name):
+    gradient, solver = CONFIGS[method]
+    controller = CONTROLLERS[ctrl_name]
+    tol = 1e-5 if ctrl_name == "fixed" else 2e-3
+
+    def rev_loss(p):
+        return jnp.sum(solve(_f, p, Z0, 1.0, 0.0, solver=solver,
+                             controller=controller, gradient=gradient).ys ** 2)
+
+    def refl_loss(p):
+        return jnp.sum(solve(_f_reflected, p, Z0, 0.0, 1.0, solver=solver,
+                             controller=controller, gradient=gradient).ys ** 2)
+
+    rev = solve(_f, PARAMS, Z0, 1.0, 0.0, solver=solver,
+                controller=controller, gradient=gradient)
+    refl = solve(_f_reflected, PARAMS, Z0, 0.0, 1.0, solver=solver,
+                 controller=controller, gradient=gradient)
+    np.testing.assert_allclose(np.asarray(rev.ys), np.asarray(refl.ys),
+                               rtol=tol, atol=tol)
+
+    g_rev = jax.grad(rev_loss)(PARAMS)["a"]
+    g_refl = jax.grad(refl_loss)(PARAMS)["a"]
+    np.testing.assert_allclose(np.asarray(g_rev), np.asarray(g_refl),
+                               rtol=20 * tol, atol=20 * tol)
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_descending_grid_matches_reflected_ascending(method):
+    gradient, solver = CONFIGS[method]
+    controller = CONTROLLERS["fixed"]
+    ts_down = jnp.linspace(1.0, 0.0, 5)
+    ts_up = jnp.linspace(0.0, 1.0, 5)
+
+    down = solve(_f, PARAMS, Z0, solver=solver, controller=controller,
+                 gradient=gradient, saveat=SaveAt(ts=ts_down))
+    up = solve(_f_reflected, PARAMS, Z0, solver=solver, controller=controller,
+               gradient=gradient, saveat=SaveAt(ts=ts_up))
+    # Row k of the descending solve is z at 1 - k/4 — the reflected
+    # ascending solve's row k.
+    np.testing.assert_allclose(np.asarray(down.ys), np.asarray(up.ys),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(down.ts), np.asarray(ts_down))
+
+    def loss(p, fn, grid):
+        sol = solve(fn, p, Z0, solver=solver, controller=controller,
+                    gradient=gradient, saveat=SaveAt(ts=grid))
+        return jnp.sum(sol.ys[2] ** 2)  # an interior observation
+
+    g_down = jax.grad(lambda p: loss(p, _f, ts_down))(PARAMS)["a"]
+    g_up = jax.grad(lambda p: loss(p, _f_reflected, ts_up))(PARAMS)["a"]
+    np.testing.assert_allclose(np.asarray(g_down), np.asarray(g_up),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_forward_reverse_roundtrip_recovers_z0(method):
+    """solve to t1, then solve back to t0 from the endpoint: the composed
+    map is identity to solver tolerance (both directions of every driver
+    and, through the gradient calls, of ALF's inverse reconstruction)."""
+    gradient, solver = CONFIGS[method]
+    # NB: max_steps must cover the whole span at this tolerance — an
+    # exhausted trial budget truncates the solve silently (the controller's
+    # documented bounded-budget contract), which would masquerade as
+    # direction error here.
+    controller = AdaptiveController(1e-5, 1e-6, 512)
+    fwd = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=solver,
+                controller=controller, gradient=gradient)
+    back = solve(_f, PARAMS, fwd.ys, 1.0, 0.0, solver=solver,
+                 controller=controller, gradient=gradient)
+    np.testing.assert_allclose(np.asarray(back.ys), np.asarray(Z0),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Thm 2.1 regression: MALI reverse-accurate, Backsolve drifts
+# ---------------------------------------------------------------------------
+
+
+def test_thm21_mali_exact_backsolve_drifts():
+    """Stiff decay, identical damped-ALF discretization for all three
+    methods; Naive (direct backprop) is the exact discrete gradient.
+    MALI's inverse reconstruction reproduces it to float precision;
+    Backsolve re-derives the trajectory by a fresh reverse-time numerical
+    solve of an (in reverse) exponentially unstable ODE and drifts by
+    orders of magnitude more (paper Thm 2.1)."""
+    def f(params, z, t):
+        return -params["a"] * z
+
+    params = {"a": jnp.float32(8.0)}
+    z0 = jnp.ones((3,))
+    solver = ALF(eta=0.9)       # damping suppresses the marginally-stable
+    controller = ConstantSteps(128)  # velocity oscillation on stiff rows
+
+    def loss(p, gradient):
+        return jnp.sum(solve(f, p, z0, 0.0, 1.0, solver=solver,
+                             controller=controller, gradient=gradient).ys)
+
+    g_naive = float(jax.grad(lambda p: loss(p, Naive()))(params)["a"])
+    g_mali = float(jax.grad(lambda p: loss(p, MALI()))(params)["a"])
+    g_back = float(jax.grad(lambda p: loss(p, Backsolve()))(params)["a"])
+
+    ref = abs(g_naive)
+    assert ref > 0
+    rel_mali = abs(g_mali - g_naive) / ref
+    rel_back = abs(g_back - g_naive) / ref
+    assert rel_mali < 1e-4, rel_mali           # reverse-accurate
+    assert rel_back > 1e-3, rel_back           # measurable drift
+    assert rel_back > 100 * rel_mali, (rel_mali, rel_back)
+
+
+# ---------------------------------------------------------------------------
+# Dense output: Solution.evaluate(t) vs direct grid solves
+# ---------------------------------------------------------------------------
+
+
+DENSE_CONTROLLERS = {
+    "fixed": ConstantSteps(8),
+    # Dense recording covers [t0, t1] as ONE segment: the budget must span
+    # it (Stats.span_complete asserts it did).
+    "adaptive": AdaptiveController(1e-4, 1e-5, 256),
+}
+
+
+@pytest.mark.parametrize("ctrl_name", sorted(DENSE_CONTROLLERS))
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_evaluate_agrees_with_grid_solve(method, ctrl_name):
+    gradient, solver = CONFIGS[method]
+    controller = DENSE_CONTROLLERS[ctrl_name]
+    dense = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=solver,
+                  controller=controller, gradient=gradient,
+                  saveat=SaveAt(dense=True))
+    assert dense.interpolation is not None
+    assert bool(dense.stats.span_complete)
+    held_out = jnp.asarray([0.0, 0.13, 0.41, 0.77, 1.0])
+    grid = solve(_f, PARAMS, Z0, solver=solver, controller=controller,
+                 gradient=gradient, saveat=SaveAt(ts=held_out))
+    np.testing.assert_allclose(np.asarray(dense.evaluate(held_out)),
+                               np.asarray(grid.ys), rtol=5e-3, atol=2e-3)
+    # endpoint consistency: evaluate(t1) is the recorded final state
+    np.testing.assert_allclose(np.asarray(dense.evaluate(1.0)),
+                               np.asarray(dense.ys), rtol=1e-6, atol=1e-6)
+
+
+def test_lockstep_batched_step_record_accessors():
+    """Lockstep-batched steps=True/dense=True rebuild Stats with per-row
+    totals (B x the shared counters); the Solution accessors must still
+    report the shared record's live rows and carry span_complete."""
+    from repro.core import Lockstep
+    zb = jnp.ones((4, 3))
+    sol = solve(_f, PARAMS, zb, 0.0, 1.0, solver=ALF(),
+                controller=ConstantSteps(8), saveat=SaveAt(steps=True),
+                batching=Lockstep())
+    assert int(sol.num_steps) == 8          # NOT 4 * 8 (the per-row total)
+    assert int(sol.stats.n_accepted) == 32  # batched contract: row total
+    assert int(np.asarray(sol.step_mask).sum()) == 9
+    assert bool(sol.stats.span_complete)
+
+    dense = solve(_f, PARAMS, zb, 0.0, 1.0, solver=ALF(),
+                  controller=ConstantSteps(8), saveat=SaveAt(dense=True),
+                  batching=Lockstep())
+    assert dense.stats.span_complete is not None
+    assert bool(dense.stats.span_complete)
+    assert dense.evaluate(0.5).shape == (4, 3)
+
+
+def test_span_complete_flags_truncated_dense_record():
+    """An exhausted adaptive budget truncates the recorded span silently;
+    Stats.span_complete is the documented way to detect it."""
+    tight = AdaptiveController(1e-6, 1e-7, 8)  # cannot cover [0, 1]
+    sol = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=ALF(), controller=tight,
+                saveat=SaveAt(dense=True))
+    assert not bool(sol.stats.span_complete)
+    ok = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=ALF(),
+               controller=DENSE_CONTROLLERS["adaptive"],
+               saveat=SaveAt(dense=True))
+    assert bool(ok.stats.span_complete)
+
+
+def test_evaluate_reverse_time_dense():
+    sol = solve(_f, PARAMS, Z0, 1.0, 0.0, solver=ALF(),
+                controller=AdaptiveController(1e-4, 1e-5, 256),
+                saveat=SaveAt(dense=True))
+    fwd = solve(_f_reflected, PARAMS, Z0, solver=ALF(),
+                controller=AdaptiveController(1e-4, 1e-5, 256),
+                saveat=SaveAt(ts=jnp.asarray([0.0, 0.35, 0.8, 1.0])))
+    # reflected query: z(t) of the reverse solve == w(1 - t)
+    queries = 1.0 - jnp.asarray([0.0, 0.35, 0.8, 1.0])
+    np.testing.assert_allclose(np.asarray(sol.evaluate(queries)),
+                               np.asarray(fwd.ys), rtol=5e-3, atol=2e-3)
+
+
+def test_evaluate_gradients_flow():
+    def loss(p):
+        sol = solve(_f, p, Z0, 0.0, 1.0, solver=ALF(),
+                    controller=ConstantSteps(8), saveat=SaveAt(dense=True))
+        return jnp.sum(sol.evaluate(jnp.asarray([0.25, 0.6])) ** 2)
+
+    g = jax.grad(loss)(PARAMS)["a"]
+    assert np.isfinite(float(g))
+    # finite-difference check of the interpolated-loss gradient
+    eps = 1e-3
+    lp = loss({"a": PARAMS["a"] + eps})
+    lm = loss({"a": PARAMS["a"] - eps})
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    np.testing.assert_allclose(float(g), fd, rtol=5e-2)
+
+
+def test_evaluate_requires_dense():
+    sol = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=ALF(),
+                controller=ConstantSteps(4))
+    with pytest.raises(ValueError, match="dense"):
+        sol.evaluate(0.5)
+
+
+def test_step_mask_disambiguates_padding():
+    """A padded steps=True buffer whose padding rows hold t=0.0 must be
+    distinguishable from a legitimate t=0.0 grid point (the _solve_dense
+    ambiguity): step_mask marks exactly the live rows."""
+    sol = solve(_f, PARAMS, Z0, 0.0, 1.0, solver=ALF(),
+                controller=AdaptiveController(1e-2, 1e-3, 64),
+                saveat=SaveAt(steps=True))
+    mask = np.asarray(sol.step_mask)
+    n = int(sol.num_steps)
+    assert mask.sum() == n + 1
+    assert mask[0] and not mask[-1]  # padded buffer: live prefix only
+    # padding rows are exactly the masked-out ones even though their ts
+    # value (0.0) collides with the legitimate first timepoint
+    ts = np.asarray(sol.ts)
+    assert ts[0] == 0.0 and np.all(ts[~mask] == 0.0)
+    assert np.all(np.diff(ts[mask]) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+EV_A = 0.7
+T_CROSS = math.log(2.0) / EV_A  # z0=1 decaying through 0.5
+
+
+def _decay(params, z, t):
+    return -params["a"] * z
+
+
+EV_PARAMS = {"a": jnp.float32(EV_A)}
+EV_Z0 = jnp.ones((3,))
+EV = Event(lambda z, t: z[0] - 0.5, direction=-1)
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_event_time_and_gradient(method):
+    gradient, solver = CONFIGS[method]
+    controller = ConstantSteps(96)
+    sol = solve(_decay, EV_PARAMS, EV_Z0, 0.0, 3.0, solver=solver,
+                controller=controller, gradient=gradient, event=EV)
+    assert bool(sol.stats.event_fired)
+    assert abs(float(sol.stats.event_time) - T_CROSS) < 1e-3
+    assert abs(float(sol.ys[0]) - 0.5) < 1e-3
+    assert abs(float(sol.ts) - float(sol.stats.event_time)) < 1e-6
+
+    def loss(p):
+        s = solve(_decay, p, EV_Z0, 0.0, 3.0, solver=solver,
+                  controller=controller, gradient=gradient, event=EV)
+        return jnp.sum(s.ys ** 2)
+
+    g = float(jax.grad(loss)(EV_PARAMS)["a"])
+    assert np.isfinite(g)
+    # frozen-t_event analytic gradient: d/da sum(3 * e^{-2 a t*}) at t*
+    g_exact = -2.0 * T_CROSS * 3.0 * math.exp(-2.0 * EV_A * T_CROSS)
+    np.testing.assert_allclose(g, g_exact, rtol=2e-2)
+
+
+def test_event_grid_rows_frozen_after_event():
+    ts = jnp.linspace(0.0, 3.0, 7)
+    sol = solve(_decay, EV_PARAMS, EV_Z0, solver=ALF(),
+                controller=ConstantSteps(96), gradient=MALI(),
+                saveat=SaveAt(ts=ts), event=EV)
+    t_ev = float(sol.stats.event_time)
+    ts_out = np.asarray(sol.ts)
+    ys_out = np.asarray(sol.ys)
+    assert bool(sol.stats.event_fired)
+    # pre-event rows keep their grid time; post-event rows clamp to t_event
+    pre = np.asarray(ts) <= t_ev
+    np.testing.assert_allclose(ts_out[pre], np.asarray(ts)[pre], atol=1e-6)
+    np.testing.assert_allclose(ts_out[~pre], t_ev, atol=1e-6)
+    # ... and hold the frozen terminal state
+    for row in ys_out[~pre]:
+        np.testing.assert_allclose(row, ys_out[~pre][0], atol=1e-5)
+    np.testing.assert_allclose(ys_out[~pre][:, 0], 0.5, atol=1e-3)
+
+
+def test_event_does_not_fire_within_short_span():
+    sol = solve(_decay, EV_PARAMS, EV_Z0, 0.0, 0.2, solver=ALF(),
+                controller=ConstantSteps(16), gradient=MALI(), event=EV)
+    assert not bool(sol.stats.event_fired)
+    assert abs(float(sol.stats.event_time) - 0.2) < 1e-6
+    # no event => the plain end state
+    plain = solve(_decay, EV_PARAMS, EV_Z0, 0.0, 0.2, solver=ALF(),
+                  controller=ConstantSteps(16), gradient=MALI())
+    np.testing.assert_allclose(np.asarray(sol.ys), np.asarray(plain.ys),
+                               atol=1e-6)
+
+
+def test_event_direction_filter():
+    # Harmonic oscillator, z[0](t) = cos t: zero crossings alternate
+    # falling (pi/2) then rising (3*pi/2). The direction filter must skip
+    # the first (falling) crossing for a rising-only event.
+    def osc(params, z, t):
+        return jnp.stack([z[1], -z[0]])
+
+    z0 = jnp.asarray([1.0, 0.0])
+    kw = dict(solver=ALF(), controller=ConstantSteps(160), gradient=MALI())
+    s_fall = solve(osc, {}, z0, 0.0, 5.0,
+                   event=Event(lambda z, t: z[0], direction=-1), **kw)
+    s_rise = solve(osc, {}, z0, 0.0, 5.0,
+                   event=Event(lambda z, t: z[0], direction=+1), **kw)
+    assert bool(s_fall.stats.event_fired)
+    assert bool(s_rise.stats.event_fired)
+    assert abs(float(s_fall.stats.event_time) - math.pi / 2) < 5e-3
+    assert abs(float(s_rise.stats.event_time) - 3 * math.pi / 2) < 5e-3
+
+
+def test_event_reverse_time():
+    z_end = EV_Z0 * math.exp(-EV_A * 3.0)
+    ev_rise = Event(lambda z, t: z[0] - 0.5, direction=+1)
+    sol = solve(_decay, EV_PARAMS, z_end, 3.0, 0.0, solver=ALF(),
+                controller=ConstantSteps(96), gradient=MALI(), event=ev_rise)
+    assert bool(sol.stats.event_fired)
+    assert abs(float(sol.stats.event_time) - T_CROSS) < 2e-3
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="direction"):
+        Event(lambda z, t: z, direction=2)
+    with pytest.raises(ValueError, match="max_bisections"):
+        Event(lambda z, t: z, max_bisections=0)
+    with pytest.raises(TypeError, match="callable"):
+        Event(3.0)
+    with pytest.raises(ValueError, match="not supported"):
+        solve(_decay, EV_PARAMS, EV_Z0, 0.0, 1.0, solver=ALF(),
+              controller=ConstantSteps(4), gradient=MALI(), event=EV,
+              saveat=SaveAt(steps=True))
+    from repro.core import Lockstep
+    with pytest.raises(ValueError, match="batching"):
+        solve(_decay, EV_PARAMS, jnp.ones((4, 3)), 0.0, 1.0, solver=ALF(),
+              controller=ConstantSteps(4), gradient=MALI(), event=EV,
+              batching=Lockstep())

@@ -155,17 +155,18 @@ def test_saveat_trajectory_matches_legacy_ts():
 
 
 def test_saveat_steps_dense_output():
-    """SaveAt(steps=True): rows 0..n_accepted are the step-start states then
-    the final state, at the recorded step times."""
+    """SaveAt(steps=True): the live rows (Solution.step_mask) are the
+    step-start states then the final state, at the recorded step times."""
     params, z0 = _toy()
     sol = solve(_toy_f, params, z0, 0.0, 1.0, solver=ALF(),
                 controller=ConstantSteps(8), saveat=SaveAt(steps=True))
-    n = int(sol.stats.n_accepted)
-    assert n == 8
-    ts = np.asarray(sol.ts)[:n + 1]
+    assert int(sol.num_steps) == 8
+    mask = np.asarray(sol.step_mask)
+    assert mask.sum() == 9  # 8 step starts + the endpoint row
+    ts = np.asarray(sol.ts)[mask]
     np.testing.assert_allclose(ts, np.linspace(0.0, 1.0, 9), atol=1e-6)
     exact = float(z0) * np.exp(ALPHA * ts)
-    np.testing.assert_allclose(np.asarray(sol.ys)[:n + 1], exact, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(sol.ys)[mask], exact, atol=5e-3)
 
 
 def test_saveat_steps_adaptive_and_grad():
@@ -173,12 +174,14 @@ def test_saveat_steps_adaptive_and_grad():
     sol = solve(_toy_f, params, z0, 0.0, 1.0, solver=ALF(),
                 controller=AdaptiveController(1e-4, 1e-5, 64),
                 saveat=SaveAt(steps=True))
-    n = int(sol.stats.n_accepted)
+    n = int(sol.num_steps)
     assert 2 <= n <= 64
-    ts = np.asarray(sol.ts)[:n + 1]
+    mask = np.asarray(sol.step_mask)
+    assert mask.sum() == n + 1
+    ts = np.asarray(sol.ts)[mask]
     assert ts[0] == 0.0 and ts[-1] == 1.0
     exact = float(z0) * np.exp(ALPHA * ts)
-    np.testing.assert_allclose(np.asarray(sol.ys)[:n + 1], exact, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(sol.ys)[mask], exact, atol=5e-3)
 
     # dense output is differentiable (direct backprop through the record)
     def loss(p):
@@ -258,8 +261,19 @@ def test_validation_legacy_kwarg_drop():
 
 
 def test_validation_saveat():
-    with pytest.raises(ValueError, match="not both"):
+    with pytest.raises(ValueError, match="only one of"):
         SaveAt(ts=jnp.asarray([0.0, 1.0]), steps=True)
+    with pytest.raises(ValueError, match="only one of"):
+        SaveAt(steps=True, dense=True)
+    with pytest.raises(ValueError, match="only one of"):
+        SaveAt(ts=jnp.asarray([0.0, 1.0]), dense=True)
+
+
+def test_validation_empty_span():
+    params, z0 = _toy()
+    with pytest.raises(ValueError, match="empty integration span"):
+        solve(_toy_f, params, z0, 0.5, 0.5, gradient=Naive(),
+              controller=ConstantSteps(2))
 
 
 def test_ode_settings_validate_extended():
@@ -278,3 +292,38 @@ def test_ode_settings_validate_extended():
     assert isinstance(solver, ALF) and solver.eta == 0.9
     assert isinstance(controller, ConstantSteps) and controller.n == 4
     assert isinstance(gradient, MALI)
+
+
+def test_ode_settings_t0_and_reverse_block():
+    from repro.core import OdeSettings, ode_block
+    with pytest.raises(ValueError, match="empty integration span"):
+        OdeSettings(mode="per_block", t0=1.0, t1=1.0).validate()
+    with pytest.raises(ValueError, match="ode.t0"):
+        OdeSettings(mode="per_block", t0=float("inf")).validate()
+
+    params, z0 = _toy()
+    # a reverse-time block (t0 > t1) straight from the config equals the
+    # explicit reverse solve
+    settings = OdeSettings(mode="per_block", method="mali", n_steps=8,
+                           t0=1.0, t1=0.0)
+    block = ode_block(_toy_f, settings)
+    direct = solve(_toy_f, params, z0, 1.0, 0.0, solver=ALF(),
+                   controller=ConstantSteps(8), gradient=MALI()).ys
+    np.testing.assert_array_equal(np.asarray(block(params, z0)),
+                                  np.asarray(direct))
+    # default t0 stays 0.0 (behavior-preserving for existing configs)
+    assert OdeSettings().t0 == 0.0
+
+
+def test_odeint_facade_deprecation_warning():
+    params, z0 = _toy()
+    with pytest.warns(DeprecationWarning, match="legacy string-keyed"):
+        odeint(_toy_f, params, z0, n_steps=4)
+
+
+def test_get_solver_unknown_name_lists_registry():
+    from repro.core import get_solver
+    with pytest.raises(ValueError, match="registered solver names") as ei:
+        get_solver("rk45")
+    for name in ("alf", "dopri5", "heun_euler"):
+        assert name in str(ei.value)
