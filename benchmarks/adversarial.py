@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 sys.path.insert(0, "examples")
 
-from .common import Row
+from .common import Row  # noqa: E402
 
 EPS = (0.1, 0.3)
 ATTACK_SOLVERS = (("alf", 4), ("rk4", 4))

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ALF, AdaptiveController, ConstantSteps, Event, MALI,
+from repro.core import (ALF, ConstantSteps, Event, MALI,
                         SaveAt, solve)
 
 from .common import Row, time_fn

@@ -1,0 +1,19 @@
+"""repro.analysis: odelint static checks + device-free trace audit.
+
+Two layers guard the invariants JAX never checks for us:
+
+* :mod:`repro.analysis.lint` — **odelint**, an AST linter (stdlib ``ast``,
+  no third-party deps) with repo-specific rules R001–R005 over ``core/``,
+  ``kernels/`` and ``launch/``;
+* :mod:`repro.analysis.trace_audit` — a device-free ``jax.eval_shape``
+  sweep of the Solver x GradientMethod x StepController x Batching x
+  direction matrix, plus a jit retrace count (same static config twice
+  must trace exactly once).
+
+Entry point: ``PYTHONPATH=src python -m repro.analysis
+[--json analysis_report.json]`` — exits non-zero on any violation. See
+``src/repro/analysis/README.md`` for the rule catalogue.
+"""
+from .lint import Violation, lint_source, run_lint
+
+__all__ = ["Violation", "lint_source", "run_lint"]

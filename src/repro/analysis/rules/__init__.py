@@ -1,0 +1,16 @@
+"""odelint rule modules. Each exposes ``check(tree, src, path, ctx)``
+returning a list of :class:`~repro.analysis.rules.common.Violation`."""
+from . import (r001_traced_branch, r002_custom_vjp, r003_pallas,
+               r004_registry, r005_signed_buffer)
+from .common import Violation
+
+# Rule id -> (module, which file paths it applies to). R004 is repo-level
+# (runtime registry introspection) and is dispatched separately by lint.py.
+AST_RULES = {
+    "R001": r001_traced_branch,
+    "R002": r002_custom_vjp,
+    "R003": r003_pallas,
+    "R005": r005_signed_buffer,
+}
+
+__all__ = ["AST_RULES", "Violation", "r004_registry"]

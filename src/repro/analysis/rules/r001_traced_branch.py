@@ -1,0 +1,42 @@
+"""R001 — no Python ``if``/``while`` on traced values.
+
+A Python branch on a ``jnp``/``lax`` value either crashes at trace time
+(``TracerBoolConversionError``) or, worse, silently bakes one side into
+the jaxpr when the value happens to be concrete at trace time and traced
+later (the classic "works in the test, wrong under vmap/jit" bug).
+Control flow on traced values belongs in ``lax.cond`` /
+``lax.while_loop`` / ``jnp.where``.
+
+Static branches are fine and common (config flags, ``isinstance``,
+``.ndim``/``.shape`` metadata) — the taint model in
+:mod:`repro.analysis.rules.common` exempts them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .common import (Violation, expr_tainted, function_taint, iter_functions,
+                     own_nodes)
+
+RULE = "R001"
+
+
+def check(tree: ast.AST, src: str, path: str, ctx) -> List[Violation]:
+    out: List[Violation] = []
+    for fdef, chain in iter_functions(tree):
+        env = set()
+        for encl in chain:
+            env |= function_taint(encl, env)
+        tainted = function_taint(fdef, env)
+        for node in own_nodes(fdef):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    expr_tainted(node.test, tainted):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                out.append(Violation(
+                    RULE, path, node.lineno,
+                    f"Python `{kw}` on a traced value in "
+                    f"`{fdef.name}` — use lax.cond/lax.while_loop/"
+                    f"jnp.where (or launder via .shape/.ndim metadata "
+                    f"if the predicate is actually static)"))
+    return out

@@ -1,0 +1,206 @@
+"""R002 — custom_vjp hygiene.
+
+Three sub-checks, each motivated by a bug class this repo has actually
+hit (the PR-2 float0 incident; see analysis/README.md):
+
+* **R002a — explicit residuals.** Every ``*_fwd`` registered via
+  ``defvjp`` must return a two-tuple whose second element is an explicit
+  tuple literal (or a name assigned from one inside the function). A
+  residual pytree built opaquely (dict comprehension, helper call) hides
+  what the backward pass depends on and is how closure-captured state
+  sneaks in.
+* **R002b — module-level primal/fwd/bwd.** The functions handed to
+  ``jax.custom_vjp``/``defvjp`` must be module-level ``def``s, not
+  closures: a nested def can capture tracers from the enclosing trace,
+  which breaks the residual contract invisibly (the tracer leaks around
+  the custom_vjp boundary).
+* **R002c — no arithmetic on integer Stats outside the primal.** The
+  integer step/eval counters returned by a gradient method's custom_vjp
+  carry *instantiated float0 tangents* under vmap-of-grad; any arithmetic
+  on them outside the primal crashes jvp tracing (the PR-2 incident).
+  Counters must be laundered through ``_detached``/``stop_gradient``
+  (or ``int()`` on the host) before arithmetic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .common import Violation, dotted_name, own_nodes, target_names
+
+RULE = "R002"
+
+_COUNTER_ATTRS = {"n_accepted", "n_rejected", "n_fevals", "n_trials"}
+_LAUNDER_FUNCS = {"_detached", "stop_gradient", "int", "float",
+                  "make_run_stats"}
+_ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod,
+              ast.Pow)
+
+
+def _module_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _custom_vjp_registrations(tree: ast.Module):
+    """-> (primal names, {vjp object name: (fwd node, bwd node)}).
+    Nodes are ast.Name/other expressions as written at the defvjp site."""
+    primals: List = []
+    defvjps: Dict[str, tuple] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            d = dotted_name(node.value.func)
+            if d and d.endswith("custom_vjp") and node.value.args:
+                primals.append((node.value.args[0], node))
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                base = dec.func if isinstance(dec, ast.Call) else dec
+                d = dotted_name(base)
+                if d and d.endswith("custom_vjp"):
+                    primals.append((ast.Name(id=node.name), node))
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d and d.endswith(".defvjp") and len(node.args) >= 2:
+                obj = d.rsplit(".", 1)[0]
+                defvjps[obj] = (node.args[0], node.args[1], node)
+    return primals, defvjps
+
+
+def _check_fwd_returns(fdef: ast.FunctionDef, path: str) -> List[Violation]:
+    out = []
+    tuple_names: Set[str] = set()
+    for node in own_nodes(fdef):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Tuple):
+            for t in node.targets:
+                tuple_names.update(target_names(t))
+    for node in own_nodes(fdef):
+        if not isinstance(node, ast.Return) or node.value is None:
+            continue
+        ok = False
+        if isinstance(node.value, ast.Tuple) and len(node.value.elts) == 2:
+            res = node.value.elts[1]
+            ok = isinstance(res, ast.Tuple) or (
+                isinstance(res, ast.Name) and res.id in tuple_names)
+        if not ok:
+            out.append(Violation(
+                RULE, path, node.lineno,
+                f"custom_vjp fwd `{fdef.name}` must `return out, "
+                f"(res1, res2, ...)` with the residuals an explicit "
+                f"tuple literal — opaque residual pytrees hide what the "
+                f"backward pass closes over"))
+    return out
+
+
+def _check_structure(tree: ast.Module, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    defs = _module_defs(tree)
+    primals, defvjps = _custom_vjp_registrations(tree)
+
+    for fn_node, site in primals:
+        if not (isinstance(fn_node, ast.Name) and fn_node.id in defs):
+            name = dotted_name(fn_node) or ast.dump(fn_node)[:40]
+            out.append(Violation(
+                RULE, path, getattr(site, "lineno", 1),
+                f"custom_vjp primal `{name}` is not a module-level "
+                f"function — nested defs can close over live tracers"))
+
+    for obj, (fwd, bwd, call) in defvjps.items():
+        for role, fn_node in (("fwd", fwd), ("bwd", bwd)):
+            if not isinstance(fn_node, ast.Name):
+                out.append(Violation(
+                    RULE, path, call.lineno,
+                    f"`{obj}.defvjp` {role} must be a module-level named "
+                    f"function (got a non-name expression) — lambdas/"
+                    f"closures can capture tracers"))
+                continue
+            if fn_node.id not in defs:
+                out.append(Violation(
+                    RULE, path, call.lineno,
+                    f"`{obj}.defvjp` {role} `{fn_node.id}` is not defined "
+                    f"at module level in this file — closure-captured "
+                    f"state cannot be audited"))
+        if isinstance(fwd, ast.Name) and fwd.id in defs:
+            out.extend(_check_fwd_returns(defs[fwd.id], path))
+    return out
+
+
+def _is_counter_read(node: ast.AST, raw: Set[str]) -> bool:
+    """`<name>.n_accepted`-style read where <name> holds a raw (un-detached)
+    integrate/custom_vjp result."""
+    if isinstance(node, ast.Attribute) and node.attr in _COUNTER_ATTRS:
+        base = node.value
+        while isinstance(base, ast.Attribute):
+            base = base.value
+        return isinstance(base, ast.Name) and base.id in raw
+    return False
+
+
+def _check_counter_arith(tree: ast.Module, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    primals, defvjps = _custom_vjp_registrations(tree)
+    exempt = set()
+    for fn_node, _ in primals:
+        if isinstance(fn_node, ast.Name):
+            exempt.add(fn_node.id)
+    for fwd, bwd, _ in defvjps.values():
+        for fn_node in (fwd, bwd):
+            if isinstance(fn_node, ast.Name):
+                exempt.add(fn_node.id)
+
+    for fdef in [n for n in ast.walk(tree)
+                 if isinstance(n, ast.FunctionDef)]:
+        if fdef.name in exempt or fdef.name.endswith("_fwd") or \
+                fdef.name.endswith("_bwd"):
+            continue  # the primal owns counter arithmetic by design
+        # Build a line-ordered event log so `rstats = _detached(rstats)`
+        # launders only the uses BELOW it.
+        events = []
+        for node in own_nodes(fdef):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                d = dotted_name(node.value.func) or ""
+                names = [n for t in node.targets for n in target_names(t)]
+                if "integrate" in d.split(".")[-1] or d in exempt:
+                    events.append((node.lineno, "add", names))
+                elif d.split(".")[-1] in _LAUNDER_FUNCS:
+                    events.append((node.lineno, "remove", names))
+        events.sort()
+        if not any(kind == "add" for _, kind, _ in events):
+            continue
+
+        def raw_at(lineno: int) -> Set[str]:
+            raw: Set[str] = set()
+            for ln, kind, names in events:
+                if ln >= lineno:
+                    break
+                (raw.update if kind == "add" else
+                 raw.difference_update)(names)
+            return raw
+
+        for node in own_nodes(fdef):
+            raw = raw_at(getattr(node, "lineno", 0))
+            hit = None
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, _ARITH_OPS):
+                for side in (node.left, node.right):
+                    if _is_counter_read(side, raw):
+                        hit = side
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, _ARITH_OPS):
+                if _is_counter_read(node.value, raw):
+                    hit = node.value
+            if hit is not None:
+                out.append(Violation(
+                    RULE, path, node.lineno,
+                    f"arithmetic on integer Stats counter "
+                    f"`.{hit.attr}` outside the custom_vjp primal in "
+                    f"`{fdef.name}` — integer outputs carry instantiated "
+                    f"float0 tangents under vmap-of-grad; detach via "
+                    f"`_detached`/`stop_gradient` first (PR-2 incident)"))
+    return out
+
+
+def check(tree: ast.AST, src: str, path: str, ctx) -> List[Violation]:
+    out = _check_structure(tree, path)
+    out.extend(_check_counter_arith(tree, path))
+    return out

@@ -1,0 +1,206 @@
+"""R003 — Pallas kernel contracts.
+
+* **R003a** every ``pl.pallas_call`` passes an explicit ``grid=`` — an
+  implicit grid means the tiling was never thought about.
+* **R003b** ``BlockSpec`` block shapes are static Python ints (untraced
+  expressions) — a traced block dim fails at lowering on device even when
+  interpret mode shrugs.
+* **R003c** every ``X // Y`` inside a ``grid=`` expression is
+  *divisibility-guarded* in the same function: an ``assert X % Y == 0``,
+  or ``X``/its definition padded via ``% Y``. An unguarded floor division
+  silently drops the remainder rows — the grid covers ``(X // Y) * Y``
+  elements and the tail of the output buffer is never written.
+* **R003d** kernel-ref writes cast explicitly: ``ref[...] = expr`` must
+  end in ``.astype(ref.dtype)`` (f32 accumulate, storage-dtype write —
+  the TPU contract; an implicit cast hides precision decisions).
+* **R003e** every public op in ``kernels/*/ops.py`` either defines a
+  ``jax.custom_vjp`` or appears in
+  :data:`repro.kernels.registry.NO_REVERSE_RULE` with a real
+  justification — forward-only kernels must be forward-only on purpose,
+  and ``GradientMethod`` validation reads that registry.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .common import (Violation, dotted_name, expr_tainted, function_taint,
+                     iter_functions, own_nodes)
+
+RULE = "R003"
+
+
+# -- helpers ---------------------------------------------------------------
+
+def _calls_named(fdef, suffix: str):
+    for node in own_nodes(fdef):
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d and (d == suffix or d.endswith("." + suffix)):
+                yield node
+
+
+def _def_exprs(fdef) -> Dict[str, ast.AST]:
+    """name -> the expression last assigned to it (single-target only)."""
+    defs: Dict[str, ast.AST] = {}
+    for node in own_nodes(fdef):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            defs[node.targets[0].id] = node.value
+    return defs
+
+
+def _mod_guard_present(expr: Optional[ast.AST], divisor: str) -> bool:
+    """Does `expr` contain `<anything> % divisor` (a padding pattern)?"""
+    if expr is None:
+        return False
+    for node in ast.walk(expr):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod) and \
+                isinstance(node.right, ast.Name) and node.right.id == divisor:
+            return True
+    return False
+
+
+def _assert_guards(fdef) -> Set[tuple]:
+    """(dividend, divisor) pairs guarded by `assert X % Y == 0`-style
+    asserts anywhere in the function."""
+    out: Set[tuple] = set()
+    for node in own_nodes(fdef):
+        if not isinstance(node, ast.Assert):
+            continue
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod) \
+                    and isinstance(sub.left, ast.Name) \
+                    and isinstance(sub.right, ast.Name):
+                out.add((sub.left.id, sub.right.id))
+    return out
+
+
+# -- sub-checks ------------------------------------------------------------
+
+def _check_pallas_calls(tree, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    for fdef, chain in iter_functions(tree):
+        env = set()
+        for encl in chain:
+            env |= function_taint(encl, env)
+        tainted = function_taint(fdef, env)
+        guards = _assert_guards(fdef)
+        defs = _def_exprs(fdef)
+
+        for call in _calls_named(fdef, "pallas_call"):
+            grid_kw = next((kw.value for kw in call.keywords
+                            if kw.arg == "grid"), None)
+            if isinstance(grid_kw, ast.Name):     # grid=g: resolve g's def
+                grid_kw = defs.get(grid_kw.id, grid_kw)
+            if grid_kw is None:
+                out.append(Violation(
+                    RULE, path, call.lineno,
+                    "pallas_call without an explicit grid= — state the "
+                    "tiling (grid=(1,) if the kernel really is one "
+                    "program)"))
+                continue
+            for node in ast.walk(grid_kw):
+                if not (isinstance(node, ast.BinOp) and
+                        isinstance(node.op, ast.FloorDiv) and
+                        isinstance(node.left, ast.Name) and
+                        isinstance(node.right, ast.Name)):
+                    continue
+                x, y = node.left.id, node.right.id
+                guarded = (x, y) in guards or \
+                    _mod_guard_present(defs.get(x), y)
+                if not guarded:
+                    # one level of indirection: X = A + pad, pad = (-A) % Y
+                    src_expr = defs.get(x)
+                    for ref in ast.walk(src_expr) if src_expr is not None \
+                            else ():
+                        if isinstance(ref, ast.Name) and \
+                                _mod_guard_present(defs.get(ref.id), y):
+                            guarded = True
+                            break
+                if not guarded:
+                    out.append(Violation(
+                        RULE, path, node.lineno,
+                        f"grid uses `{x} // {y}` without a divisibility "
+                        f"guard — when {y} does not divide {x} the tail "
+                        f"rows are silently never written; add `assert "
+                        f"{x} % {y} == 0` or pad {x} to a multiple"))
+
+        for call in _calls_named(fdef, "BlockSpec"):
+            if not call.args or not isinstance(call.args[0], ast.Tuple):
+                continue
+            for elt in call.args[0].elts:
+                if expr_tainted(elt, tainted):
+                    out.append(Violation(
+                        RULE, path, call.lineno,
+                        "BlockSpec block shape contains a traced value — "
+                        "block dims must be static Python ints"))
+    return out
+
+
+def _check_ref_writes(tree, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    for fdef, _ in iter_functions(tree):
+        for node in own_nodes(fdef):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Subscript)):
+                continue
+            base = node.targets[0].value
+            if not (isinstance(base, ast.Name) and base.id.endswith("_ref")):
+                continue
+            val = node.value
+            ok = (isinstance(val, ast.Call) and
+                  isinstance(val.func, ast.Attribute) and
+                  val.func.attr == "astype" and len(val.args) == 1 and
+                  isinstance(val.args[0], ast.Attribute) and
+                  val.args[0].attr == "dtype")
+            if not ok:
+                out.append(Violation(
+                    RULE, path, node.lineno,
+                    f"write to `{base.id}` without an explicit "
+                    f"`.astype({base.id}.dtype)` cast — accumulate in "
+                    f"f32, cast once at the storage write"))
+    return out
+
+
+def _check_ops_allowlist(tree, path: str, ctx) -> List[Violation]:
+    """kernels/<pkg>/ops.py: public defs need a VJP or an allowlist entry."""
+    out: List[Violation] = []
+    pkg = ctx.get("kernel_package")
+    allow = ctx.get("no_reverse_rule", {})
+    has_vjp: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func) or ""
+            if d.endswith("custom_vjp") and node.args:
+                tgt = dotted_name(node.args[0])
+                if tgt:
+                    has_vjp.add(tgt)
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) or \
+                node.name.startswith("_"):
+            continue
+        key = f"{pkg}.{node.name}"
+        if node.name in has_vjp:
+            continue
+        reason = allow.get(key)
+        if reason is None:
+            out.append(Violation(
+                RULE, path, node.lineno,
+                f"kernel op `{node.name}` defines no VJP and is not in "
+                f"NO_REVERSE_RULE — register `{key}` with a justification "
+                f"(repro/kernels/registry.py) or add a custom_vjp"))
+        elif not isinstance(reason, str) or len(reason.strip()) < 20:
+            out.append(Violation(
+                RULE, path, node.lineno,
+                f"NO_REVERSE_RULE entry `{key}` has a placeholder "
+                f"justification — explain WHY forward-only is sound"))
+    return out
+
+
+def check(tree: ast.AST, src: str, path: str, ctx) -> List[Violation]:
+    out = _check_pallas_calls(tree, path)
+    out.extend(_check_ref_writes(tree, path))
+    if ctx.get("kernel_package") and path.endswith("ops.py"):
+        out.extend(_check_ops_allowlist(tree, path, ctx))
+    return out

@@ -1,0 +1,106 @@
+"""R004 — registry completeness.
+
+Every registered ``Solver`` / ``GradientMethod`` / ``Batching`` subclass
+must (a) implement the full abstract interface of its base (every base
+method whose body is ``raise NotImplementedError``), and (b) appear in at
+least one test — by class name or by its registry key. A solver that can
+be selected by string but is exercised nowhere is exactly how the matrix
+rots as it grows (the ROADMAP's solver-zoo direction multiplies it).
+
+This rule introspects the *live* registries (it imports ``repro.core``)
+rather than re-deriving them from the AST — the point is to audit what a
+user can actually reach through ``solve()``.
+"""
+from __future__ import annotations
+
+import inspect
+import re
+from pathlib import Path
+from typing import Dict, List, Set
+
+from .common import Violation
+
+RULE = "R004"
+
+
+def _abstract_members(base: type) -> List[str]:
+    """Names of `base` methods/properties whose body raises
+    NotImplementedError (the repo's convention for 'abstract')."""
+    out = []
+    for name, member in vars(base).items():
+        fn = member.fget if isinstance(member, property) else member
+        if not callable(fn):
+            continue
+        try:
+            src = inspect.getsource(fn)
+        except (OSError, TypeError):
+            continue
+        if "raise NotImplementedError" in src:
+            out.append(name)
+    return out
+
+
+def _overrides(cls: type, base: type, name: str) -> bool:
+    for klass in cls.__mro__:
+        if klass is base:
+            return False
+        if name in vars(klass):
+            return True
+    return False
+
+
+def _load_registries():
+    from repro.core import (ACA, MALI, SOLVERS, Backsolve, Batching,
+                            GradientMethod, Naive, Solver)
+
+    solvers: Dict[type, Set[str]] = {}
+    for key, inst in SOLVERS.items():
+        solvers.setdefault(type(inst), set()).add(key)
+    # METHODS in repro.core.api is the legacy string tuple; the live
+    # GradientMethod classes are the four paper rows.
+    methods: Dict[type, Set[str]] = {
+        MALI: {"mali"}, Naive: {"naive"}, ACA: {"aca"},
+        Backsolve: {"adjoint", "backsolve"},
+    }
+    batchings = {sub: {sub.__name__} for sub in Batching.__subclasses__()}
+    return [(Solver, solvers), (GradientMethod, methods),
+            (Batching, batchings)]
+
+
+def check_registries(tests_dir) -> List[Violation]:
+    out: List[Violation] = []
+    tests_dir = Path(tests_dir)
+    corpus = "\n".join(
+        p.read_text() for p in sorted(tests_dir.glob("test_*.py")))
+
+    for base, registry in _load_registries():
+        required = _abstract_members(base)
+        for cls, keys in sorted(registry.items(), key=lambda kv:
+                                kv[0].__name__):
+            path = inspect.getsourcefile(cls) or "<unknown>"
+            try:
+                line = inspect.getsourcelines(cls)[1]
+            except (OSError, TypeError):
+                line = 1
+            for name in required:
+                if not _overrides(cls, base, name):
+                    out.append(Violation(
+                        RULE, path, line,
+                        f"registered {base.__name__} subclass "
+                        f"`{cls.__name__}` does not implement abstract "
+                        f"member `{name}`"))
+            mentions = {cls.__name__} | keys
+            if not any(re.search(rf"\b{re.escape(m)}\b", corpus)
+                       for m in mentions):
+                out.append(Violation(
+                    RULE, path, line,
+                    f"registered {base.__name__} `{cls.__name__}` "
+                    f"(keys: {', '.join(sorted(keys))}) appears in no "
+                    f"test under tests/ — add at least a smoke solve"))
+    return out
+
+
+def missing_interface(cls: type, base: type) -> List[str]:
+    """Test hook: abstract members of `base` that `cls` fails to override."""
+    return [name for name in _abstract_members(base)
+            if not _overrides(cls, base, name)]

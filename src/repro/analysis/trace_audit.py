@@ -1,0 +1,283 @@
+"""Device-free trace audit of the solve() configuration matrix.
+
+Two instruments, neither of which touches a device:
+
+* **Shape audit** — ``jax.eval_shape`` over the Solver x GradientMethod x
+  StepController x Batching x direction matrix, asserting every
+  ``Solution``'s output shapes/dtypes/weak-types against golden specs
+  computed analytically from the inputs (trajectory ``(T, ...)``,
+  batch-first ``(B, T, ...)``, f32 states, int32 counters). Gradient
+  combos run ``eval_shape(grad(...))`` — abstract reverse-mode catches
+  residual/shape bugs in every custom_vjp without executing a step.
+  Known-invalid pairings (MALI x RungeKutta, ACA x ALF, Naive x Pallas
+  ALF) are asserted to raise their validation errors.
+
+* **Retrace audit** — ``jax.jit(f).trace()`` is cached like execution is:
+  tracing the same static config twice must run the Python body exactly
+  once. Each case constructs FRESH (equal-valued) solver/controller/
+  gradient/SaveAt/batching objects per call, which is exactly how user
+  code behaves across training steps; an identity-based ``__hash__`` on
+  any static argument shows up here as a second trace. (This caught
+  ``SaveAt``/``Event``'s identity hashing — fixed in interface.py.)
+
+Emits the dict that ``python -m repro.analysis`` merges into
+``analysis_report.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+D = 3          # state dim
+B = 4          # batch size
+T = 5          # observation-grid length
+F32 = jnp.float32
+
+
+def _dynamics():
+    def f(params, z, t):
+        return jnp.tanh(z @ params["w"]) + t * params["b"]
+    return f
+
+
+def _param_specs():
+    return {"w": jax.ShapeDtypeStruct((D, D), F32),
+            "b": jax.ShapeDtypeStruct((D,), F32)}
+
+
+def _method_solver_pairs():
+    from repro.core import (ACA, ALF, MALI, Backsolve, Bosh3, Dopri5,
+                            HeunEuler, Naive)
+    return [
+        ("mali/alf", MALI(), ALF()),
+        ("mali/alf-eta0.9", MALI(), ALF(eta=0.9)),
+        ("naive/alf", Naive(), ALF()),
+        ("naive/heun_euler", Naive(), HeunEuler()),
+        ("aca/heun_euler", ACA(), HeunEuler()),
+        ("aca/bosh3", ACA(), Bosh3()),
+        ("aca/dopri5", ACA(), Dopri5()),
+        ("backsolve/dopri5", Backsolve(), Dopri5()),
+        ("backsolve/alf", Backsolve(), ALF()),
+    ]
+
+
+def _controllers():
+    from repro.core import AdaptiveController, ConstantSteps
+    return [("const4", ConstantSteps(4)),
+            ("adaptive", AdaptiveController(1e-2, 1e-3, 16))]
+
+
+def _expect(combo: str, actual, shape, dtype) -> List[str]:
+    errs = []
+    if tuple(actual.shape) != tuple(shape):
+        errs.append(f"{combo}: shape {actual.shape} != golden {shape}")
+    if actual.dtype != dtype:
+        errs.append(f"{combo}: dtype {actual.dtype} != golden {dtype}")
+    if getattr(actual, "weak_type", False):
+        errs.append(f"{combo}: output is weakly typed — a Python-scalar "
+                    f"promotion leaked into the solve")
+    return errs
+
+
+def run_shape_audit():
+    """-> (n_combos, [failure strings])."""
+    from repro.core import (ACA, ALF, MALI, Dopri5, Lockstep, Naive,
+                            PerSample, SaveAt, solve)
+
+    f = _dynamics()
+    p_spec = _param_specs()
+    failures: List[str] = []
+    combos = 0
+
+    def grid(t0, t1):
+        return jnp.linspace(t0, t1, T).astype(F32)
+
+    def case(name, gradient, solver, controller, t0, t1,
+             batching: Optional[object]):
+        nonlocal combos
+        combos += 1
+        batched = batching is not None
+        z_spec = jax.ShapeDtypeStruct((B, D) if batched else (D,), F32)
+
+        def run(z0, params):
+            return solve(f, params, z0, t0, t1, solver=solver,
+                         controller=controller, gradient=gradient,
+                         saveat=SaveAt(ts=grid(t0, t1)), batching=batching)
+
+        try:
+            sol = jax.eval_shape(run, z_spec, p_spec)
+        except Exception as e:  # noqa: BLE001 — report, don't abort sweep
+            failures.append(f"{name}: eval_shape raised "
+                            f"{type(e).__name__}: {e}")
+            return
+        ys_shape = (B, T, D) if batched else (T, D)
+        failures.extend(_expect(name + ".ys", sol.ys, ys_shape, F32))
+        failures.extend(_expect(name + ".ts", sol.ts, (T,), F32))
+        for counter in ("n_accepted", "n_rejected", "n_fevals"):
+            a = getattr(sol.stats, counter)
+            if a.dtype != jnp.int32:
+                failures.append(f"{name}.stats.{counter}: dtype "
+                                f"{a.dtype} != int32")
+
+    for pname, gradient, solver in _method_solver_pairs():
+        for cname, controller in _controllers():
+            for dname, (t0, t1) in (("fwd", (0.0, 1.0)),
+                                    ("rev", (1.0, 0.0))):
+                for bname, batching in (("unbatched", None),
+                                        ("lockstep", Lockstep())):
+                    case(f"{pname}/{cname}/{dname}/{bname}",
+                         gradient, solver, controller, t0, t1, batching)
+                if controller.adaptive:
+                    # PerSample requires adaptive control (warns degenerate
+                    # under ConstantSteps, by design).
+                    case(f"{pname}/{cname}/{dname}/per_sample",
+                         gradient, solver, controller, t0, t1, PerSample())
+
+    # Gradient shapes: abstract reverse-mode through every gradient method.
+    from repro.core import (AdaptiveController, Backsolve, ConstantSteps,
+                            HeunEuler)
+    grad_cases = [
+        ("grad/mali/alf", MALI(), ALF(), ConstantSteps(4)),
+        ("grad/naive/alf", Naive(), ALF(), AdaptiveController(1e-2, 1e-3, 8)),
+        ("grad/aca/heun_euler", ACA(), HeunEuler(),
+         AdaptiveController(1e-2, 1e-3, 8)),
+        ("grad/backsolve/dopri5", Backsolve(), Dopri5(), ConstantSteps(4)),
+    ]
+    for name, gradient, solver, controller in grad_cases:
+        for dname, (t0, t1) in (("fwd", (0.0, 1.0)), ("rev", (1.0, 0.0))):
+            combos += 1
+
+            def loss(params, z0):
+                sol = solve(f, params, z0, t0, t1, solver=solver,
+                            controller=controller, gradient=gradient,
+                            saveat=SaveAt(ts=grid(t0, t1)))
+                return jnp.sum(sol.ys)
+
+            try:
+                g = jax.eval_shape(jax.grad(loss), p_spec,
+                                   jax.ShapeDtypeStruct((D,), F32))
+            except Exception as e:  # noqa: BLE001
+                failures.append(f"{name}/{dname}: eval_shape(grad) raised "
+                                f"{type(e).__name__}: {e}")
+                continue
+            for key, spec in _param_specs().items():
+                failures.extend(_expect(f"{name}/{dname}.grad[{key}]",
+                                        g[key], spec.shape, spec.dtype))
+
+    # Invalid pairings must be REJECTED at validation, not traced.
+    invalid = [
+        ("invalid/mali/dopri5", MALI(), Dopri5(), "ALF solver only"),
+        ("invalid/aca/alf", ACA(), ALF(), "Runge-Kutta"),
+        ("invalid/naive/alf-pallas", Naive(), ALF(backend="pallas"),
+         "NO_REVERSE_RULE"),
+    ]
+    for name, gradient, solver, needle in invalid:
+        combos += 1
+        try:
+            jax.eval_shape(
+                lambda z0, params: solve(f, params, z0, 0.0, 1.0,
+                                         solver=solver, gradient=gradient),
+                jax.ShapeDtypeStruct((D,), F32), p_spec)
+            failures.append(f"{name}: expected ValueError, traced fine")
+        except ValueError as e:
+            if needle not in str(e):
+                failures.append(f"{name}: error lacks {needle!r}: {e}")
+        except Exception as e:  # noqa: BLE001
+            failures.append(f"{name}: expected ValueError, got "
+                            f"{type(e).__name__}: {e}")
+    return combos, failures
+
+
+# --------------------------------------------------------------------------
+# Retrace audit
+# --------------------------------------------------------------------------
+
+def _event_cond(z, t):
+    # module-level on purpose: Event equality hashes cond_fn by identity,
+    # so retrace-free reuse requires a stable function object (a fresh
+    # lambda per step WOULD retrace, correctly).
+    return jnp.sum(z) - 10.0
+
+
+def retrace_cases():
+    """Each case: (name, fresh() -> static kwargs dict). fresh() is called
+    once per trace so every static object is a new, equal-valued instance."""
+    from repro.core import (ACA, ALF, MALI, AdaptiveController, Backsolve,
+                            ConstantSteps, Dopri5, Event, Lockstep, SaveAt)
+
+    def mali_grid():
+        return dict(solver=ALF(eta=0.9), controller=ConstantSteps(4),
+                    gradient=MALI(),
+                    saveat=SaveAt(ts=np.linspace(0.0, 1.0, T)),
+                    batching=None, event=None)
+
+    def aca_batched():
+        return dict(solver=Dopri5(),
+                    controller=AdaptiveController(1e-2, 1e-3, 16),
+                    gradient=ACA(), saveat=SaveAt(),
+                    batching=Lockstep(), event=None)
+
+    def backsolve_event():
+        return dict(solver=Dopri5(),
+                    controller=AdaptiveController(1e-2, 1e-3, 16),
+                    gradient=Backsolve(), saveat=SaveAt(),
+                    batching=None, event=Event(_event_cond, direction=+1))
+
+    return [("mali/alf/const/ts-grid", mali_grid),
+            ("aca/dopri5/adaptive/lockstep", aca_batched),
+            ("backsolve/dopri5/event", backsolve_event)]
+
+
+def count_traces(fresh, repeats: int = 2) -> int:
+    """Trace a jitted solve `repeats` times with freshly built static
+    config objects; return how many times the Python body actually ran
+    (1 == the jit cache recognized the configs as equal)."""
+    from repro.core import solve
+
+    f = _dynamics()
+    traces = {"n": 0}
+
+    def body(z0, params, *, solver, controller, gradient, saveat, batching,
+             event):
+        traces["n"] += 1
+        return solve(f, params, z0, 0.0, 1.0, solver=solver,
+                     controller=controller, gradient=gradient,
+                     saveat=saveat, batching=batching, event=event)
+
+    jitted = jax.jit(body, static_argnames=(
+        "solver", "controller", "gradient", "saveat", "batching", "event"))
+    kwargs0 = fresh()
+    batched = kwargs0["batching"] is not None
+    z0 = jnp.zeros((B, D) if batched else (D,), F32)
+    params = {"w": jnp.eye(D, dtype=F32) * 0.1, "b": jnp.zeros((D,), F32)}
+    for _ in range(repeats):
+        jitted.trace(z0, params, **fresh())   # device-free AOT trace
+    return traces["n"]
+
+
+def run_retrace_audit():
+    results = {}
+    for name, fresh in retrace_cases():
+        results[name] = count_traces(fresh)
+    return results
+
+
+def run_trace_audit() -> dict:
+    t0 = time.time()
+    combos, failures = run_shape_audit()
+    retrace = run_retrace_audit()
+    retrace_failures = [f"retrace:{name}: traced {n} times (want 1) — a "
+                        f"static config object hashes by identity"
+                        for name, n in retrace.items() if n != 1]
+    return {
+        "combos": combos,
+        "shape_failures": failures,
+        "retrace_counts": retrace,
+        "retrace_failures": retrace_failures,
+        "elapsed_s": round(time.time() - t0, 2),
+        "ok": not failures and not retrace_failures,
+    }

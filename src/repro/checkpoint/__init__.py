@@ -1,3 +1,6 @@
 from .checkpoint import (AsyncCheckpointer, list_checkpoints,
                          restore_checkpoint, restore_latest, save_checkpoint,
                          prune_checkpoints)
+
+__all__ = ["AsyncCheckpointer", "list_checkpoints", "restore_checkpoint",
+           "restore_latest", "save_checkpoint", "prune_checkpoints"]

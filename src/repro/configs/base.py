@@ -11,7 +11,7 @@ alternation); layers across periods must repeat exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.core.ode_block import OdeSettings
 

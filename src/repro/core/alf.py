@@ -16,7 +16,6 @@ Dynamics signature used across the package::
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Tuple
 
 import jax
@@ -26,11 +25,6 @@ Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 _tm = jax.tree_util.tree_map
-
-
-def _axpy(a, x, y):
-    """a * x + y over pytrees (a scalar)."""
-    return _tm(lambda xi, yi: a * xi + yi, x, y)
 
 
 def tree_add(x, y):

@@ -204,6 +204,12 @@ class SaveAt:
     integrated with direct backpropagation through the recorded step
     sequence (the memory advantage of MALI/ACA/Backsolve does not exist in
     these modes).
+
+    Equality and hashing are by VALUE (``ts`` compared by content), so a
+    freshly constructed, identical ``SaveAt`` reuses a jit cache entry
+    when passed as a static argument — the default dataclass identity
+    hash retraced on every fresh instance (caught by the trace audit's
+    retrace counter). A traced ``ts`` falls back to identity.
     """
     t1: bool = True
     ts: Optional[Any] = None
@@ -218,8 +224,27 @@ class SaveAt:
             raise ValueError("SaveAt: pass only one of ts=<grid>, "
                              f"steps=True or dense=True, not {picked}")
 
+    def _key(self):
+        if self.ts is None:
+            ts_key = None
+        else:
+            try:
+                arr = np.asarray(self.ts)
+                ts_key = (arr.dtype.str, arr.shape, arr.tobytes())
+            except Exception:       # tracer/abstract grid: identity only
+                ts_key = id(self.ts)
+        return (self.t1, ts_key, self.steps, self.dense)
 
-@dataclasses.dataclass(frozen=True, eq=False)
+    def __eq__(self, other):
+        if not isinstance(other, SaveAt):
+            return NotImplemented
+        return self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
+
+
+@dataclasses.dataclass(frozen=True)
 class Event:
     """Terminating event: stop the solve at a sign change of
     ``cond_fn(z, t)`` (a scalar event function).
@@ -256,6 +281,10 @@ class Event:
         sol = solve(f, params, z0, 0.0, 10.0, event=ev)
         sol.ys                      # z(t_event)
         sol.stats.event_time        # the crossing time
+
+    Equality/hashing are field-based (``cond_fn`` by function identity):
+    two Events wrapping the SAME condition function compare equal, so a
+    fresh wrapper does not retrace a jit cache keyed on it statically.
     """
     cond_fn: Callable[[Pytree, jax.Array], jax.Array]
     direction: int = 0

@@ -41,7 +41,6 @@ from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .alf import (alf_inverse, alf_step, alf_step_with_error, check_eta,
                   init_velocity, tree_add, tree_zeros_like)

@@ -19,7 +19,6 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from .integrate import as_time_grid, integrate_grid, scalar_time_grid
 from .interface import GradientMethod, make_run_stats, state_nbytes
@@ -50,13 +49,19 @@ class Naive(GradientMethod):
     def validate(self, solver, controller) -> None:
         super().validate(solver, controller)
         if isinstance(solver, ALF) and solver.backend == "pallas":
+            # The forward-only contract is recorded centrally: the Pallas
+            # ALF step ops are in the NO_REVERSE_RULE allowlist, so direct
+            # backprop through the launch is refused here, with the
+            # registry's reviewed justification in the error.
+            from repro.kernels.registry import no_reverse_reason
+            reason = no_reverse_reason("alf_step.alf_update")
             raise ValueError(
                 "Naive() backpropagates directly through every solver "
-                "step, and the Pallas ALF kernel has no reverse rule in "
-                "interpret mode; use ALF(backend='reference') with "
-                "Naive(), or keep backend='pallas' with MALI()/Backsolve() "
-                "(their backward passes never differentiate the forward "
-                "kernel launch)")
+                "step, but the Pallas ALF step ops are registered "
+                f"forward-only (NO_REVERSE_RULE: {reason}); use "
+                "ALF(backend='reference') with Naive(), or keep "
+                "backend='pallas' with MALI()/Backsolve() (their backward "
+                "passes never differentiate the forward kernel launch)")
 
     def integrate(self, f, params, z0, ts, solver, controller):
         state0 = solver.init_state(f, params, z0, ts[0])

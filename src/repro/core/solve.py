@@ -91,11 +91,16 @@ def _build_stats(rstats: RunStats, gradient: GradientMethod, z0: Pytree,
 
 def _check_direct_backprop(solver: Solver, mode: str) -> None:
     if isinstance(solver, ALF) and solver.backend == "pallas":
+        # Consult the kernel layer's forward-only registry rather than
+        # hardcoding the contract here (odelint R003 keeps the registry in
+        # sync with the ops that actually lack a VJP).
+        from repro.kernels.registry import no_reverse_reason
+        reason = no_reverse_reason("alf_step.alf_update")
         raise ValueError(
             f"{mode} backpropagates directly through the recorded step "
-            "sequence, which the Pallas ALF kernel does not support in "
-            "interpret mode; use ALF(backend='reference') for per-step "
-            "recording")
+            f"sequence, but the Pallas ALF step ops are registered "
+            f"forward-only (NO_REVERSE_RULE: {reason}); use "
+            f"ALF(backend='reference') for per-step recording")
 
 
 def _record_span(f, params, z0, t0, t1, solver, controller):

@@ -27,7 +27,6 @@ import dataclasses
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from .alf import alf_step_with_error, check_backend, check_eta, init_velocity
 from .dense import pad_dead_rows, shift_to_step_ends

@@ -19,7 +19,7 @@ a bounded masked ``lax.scan``, usable under reverse-mode AD).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, NamedTuple
+from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -68,21 +68,6 @@ def next_step_size(h: jax.Array, ratio: jax.Array, order: int) -> jax.Array:
     factor = SAFETY * ratio ** (-1.0 / (order + 1))
     factor = jnp.clip(factor, MIN_FACTOR, MAX_FACTOR)
     return h * factor
-
-
-class AdaptState(NamedTuple):
-    """Carry for the bounded adaptive loop."""
-    t: jax.Array          # current time
-    h: jax.Array          # current proposed step
-    done: jax.Array       # bool: reached end time
-    n_accepted: jax.Array  # int32 accepted-step count
-    n_evals: jax.Array     # int32 f-eval count (incl. rejected)
-
-
-def clip_step_to_end(t: jax.Array, h: jax.Array, t1: jax.Array) -> jax.Array:
-    """Never step past the end time (sign-aware)."""
-    remaining = t1 - t
-    return jnp.where(jnp.abs(h) > jnp.abs(remaining), remaining, h)
 
 
 def initial_step_size(rtol: float, atol: float, span: jax.Array) -> jax.Array:

@@ -1,1 +1,3 @@
 from .synthetic import DataConfig, SyntheticStream, make_batch
+
+__all__ = ["DataConfig", "SyntheticStream", "make_batch"]

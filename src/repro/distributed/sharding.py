@@ -30,10 +30,9 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.base import ModelConfig
 
 Pytree = Any
 

@@ -1,1 +1,4 @@
 """Pallas TPU kernels (interpret-mode validated on CPU) + jnp oracles."""
+from .registry import NO_REVERSE_RULE, forward_only_ops, no_reverse_reason
+
+__all__ = ["NO_REVERSE_RULE", "no_reverse_reason", "forward_only_ops"]

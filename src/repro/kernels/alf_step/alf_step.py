@@ -57,10 +57,19 @@ def _tiled_call(kernel, args, n_out, block_rows=BLOCK_ROWS, interpret=True):
     h, *arrays = args
     rows = arrays[0].shape[0]
     bs = min(block_rows, rows)
-    grid = (rows // bs,)
+    # Pad rows to a block multiple: an unguarded `rows // bs` grid covers
+    # only (rows // bs) * bs rows and the tail is silently never written
+    # (odelint R003). The ops are elementwise, so zero-padding is exact.
+    pad = (-rows) % bs
+    if pad:
+        arrays = [jnp.pad(a, ((0, pad), (0, 0))) for a in arrays]
+    rows_p = rows + pad
+    assert rows_p % bs == 0
+    grid = (rows_p // bs,)
     spec = pl.BlockSpec((bs, LANES), lambda i: (i, 0))
     out_shape = tuple(
-        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays[:n_out])
+        jax.ShapeDtypeStruct((rows_p, LANES), a.dtype)
+        for a in arrays[:n_out])
     fn = pl.pallas_call(
         kernel,
         grid=grid,
@@ -69,7 +78,12 @@ def _tiled_call(kernel, args, n_out, block_rows=BLOCK_ROWS, interpret=True):
         out_shape=out_shape if n_out > 1 else out_shape[0],
         interpret=interpret,
     )
-    return fn(jnp.asarray(h, jnp.float32).reshape(1), *arrays)
+    out = fn(jnp.asarray(h, jnp.float32).reshape(1), *arrays)
+    if not pad:
+        return out
+    if n_out > 1:
+        return tuple(o[:rows] for o in out)
+    return out[:rows]
 
 
 def midpoint_call(z, v, h, *, sign=1.0, interpret=True, block_rows=BLOCK_ROWS):

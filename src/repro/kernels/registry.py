@@ -1,0 +1,65 @@
+"""Reverse-rule registry for the Pallas kernel layer.
+
+Every public op in ``kernels/*/ops.py`` must either define a
+``jax.custom_vjp`` or appear here, in the explicit ``NO_REVERSE_RULE``
+allowlist (odelint rule R003 enforces this mechanically). An entry means
+"this op is forward-only BY DESIGN": differentiating through the kernel
+launch is either impossible (interpret-mode ``pallas_call`` has no
+transpose rule) or deliberately avoided because the surrounding gradient
+method never needs it.
+
+``GradientMethod`` validation reads this registry
+(:meth:`repro.core.naive.Naive.validate`,
+:func:`repro.core.solve._check_direct_backprop`): a method that
+backpropagates directly through recorded solver steps must refuse a solver
+backend whose step ops are allowlisted here, instead of silently tracing a
+launch that AD cannot transpose.
+
+This module is import-light on purpose (no jax, no kernel imports) so
+``repro.core`` can read it without a circular dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+# Map "<kernel package>.<op name>" -> justification. Keep each entry's
+# justification with the entry (R003 rejects empty/placeholder reasons):
+# these strings are the reviewed record of WHY forward-only is sound.
+NO_REVERSE_RULE = {
+    # ALF fused state updates: MALI reconstructs states by running the
+    # algebraically exact inverse update (Algo 3) instead of differentiating
+    # the forward launch; Naive() must (and does) reject backend='pallas'.
+    "alf_step.alf_midpoint":
+        "MALI inverts the leapfrog algebraically (alf_inverse_update); the "
+        "backward pass re-derives k1 and never transposes the launch",
+    "alf_step.alf_update":
+        "reverse-accurate gradient comes from state reconstruction, not AD "
+        "through the kernel; Naive.validate rejects the pallas backend",
+    "alf_step.alf_inverse_update":
+        "only ever called inside custom_vjp backward sweeps, which are "
+        "themselves never differentiated (no double-backward support)",
+    # Transformer/SSM serving kernels: inference-path only. Training uses
+    # the jnp oracle implementations, which AD handles natively.
+    "flash_attention.flash_attention":
+        "serving/prefill path only; training falls back to the jnp oracle "
+        "(ops wrapper), so no VJP for the Pallas launch is required",
+    "mamba_scan.selective_scan":
+        "forward serving scan; the training path scans chunks with the jnp "
+        "oracle where XLA derives the gradient",
+    "rmsnorm.rmsnorm":
+        "elementwise-norm serving kernel; training uses the jnp oracle and "
+        "XLA's native VJP",
+}
+
+
+def no_reverse_reason(qualname: str) -> Optional[str]:
+    """Justification string if ``qualname`` ("package.op") is registered
+    forward-only, else None (the op has — or must define — a VJP)."""
+    return NO_REVERSE_RULE.get(qualname)
+
+
+def forward_only_ops(package: str) -> list:
+    """All allowlisted op names inside one kernel package."""
+    prefix = package + "."
+    return sorted(k[len(prefix):] for k in NO_REVERSE_RULE if
+                  k.startswith(prefix))

@@ -14,7 +14,6 @@ import traceback      # noqa: E402
 from typing import Optional  # noqa: E402
 
 import jax            # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (ARCHS, DEFAULT_ODE, get_config,  # noqa: E402
                            get_shape_cell)

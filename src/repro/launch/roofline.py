@@ -18,9 +18,8 @@ by the loop trip count recovered from the loop-condition constant.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 # TPU v5e
 PEAK_FLOPS = 197e12        # bf16 / chip

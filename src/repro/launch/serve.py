@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.configs import DEFAULT_ODE, get_config, smoke_config
 from repro.core.ode_block import OdeSettings
-from repro.distributed.sharding import (batch_shardings, batch_sharding,
+from repro.distributed.sharding import (batch_sharding,
                                         cache_shardings, param_shardings,
                                         replicated)
 from repro.launch.mesh import make_host_mesh, make_production_mesh

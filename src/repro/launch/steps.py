@@ -7,8 +7,7 @@ gradient compression), clip, AdamW/SGD update — as a pure function
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, restore_latest
-from repro.configs import DEFAULT_ODE, get_config, smoke_config
+from repro.configs import get_config, smoke_config
 from repro.core.ode_block import OdeSettings
 from repro.data.synthetic import DataConfig, make_batch
 from repro.distributed.fault_tolerance import run_with_recovery

@@ -19,7 +19,7 @@ k/v: [n_slots, B, S_max, K, d_head].
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ index is a cache "virtual layer" slot (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
@@ -21,7 +20,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.distributed.sharding import hint
 from repro.core import solve
 from .attention import (KVCache, attention_decode, attention_prefill,
                         attention_train, init_attention)

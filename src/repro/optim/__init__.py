@@ -1,3 +1,7 @@
 from .optimizer import (OptimizerConfig, OptState, apply_updates,
                         init_opt_state, lr_schedule)
 from .compression import EFState, compress_grads, init_ef_state
+
+__all__ = ["OptimizerConfig", "OptState", "apply_updates",
+           "init_opt_state", "lr_schedule", "EFState", "compress_grads",
+           "init_ef_state"]

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import linear_dynamics, mlp_dynamics, mlp_params
+from conftest import mlp_dynamics, mlp_params
 from repro.core.alf import (alf_inverse, alf_step, alf_step_with_error,
                             check_eta, init_velocity)
 

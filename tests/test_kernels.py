@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.kernels.alf_step import ops as alf_ops
-from repro.kernels.alf_step import ref as alf_ref
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.rmsnorm import ops as rn_ops
@@ -206,8 +205,8 @@ def test_rmsnorm_unit_output_norm():
 # mamba_scan: fused selective scan
 # ---------------------------------------------------------------------------
 
-from repro.kernels.mamba_scan import ops as ms_ops
-from repro.kernels.mamba_scan import ref as ms_ref
+from repro.kernels.mamba_scan import ops as ms_ops  # noqa: E402
+from repro.kernels.mamba_scan import ref as ms_ref  # noqa: E402
 
 MS_CASES = [
     # (Bt, S, DI, ST)

@@ -7,14 +7,14 @@ import pytest
 pytest.importorskip(
     "hypothesis",
     reason="optional dep: property tests are skipped without hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.alf import alf_inverse, alf_step
-from repro.core.integrate import fixed_grid_times
-from repro.models.lm import chunked_ce_loss
-from repro.optim.compression import (compress_grads, dequantize_int8,
+from repro.core.alf import alf_inverse, alf_step  # noqa: E402
+from repro.core.integrate import fixed_grid_times  # noqa: E402
+from repro.models.lm import chunked_ce_loss  # noqa: E402
+from repro.optim.compression import (compress_grads, dequantize_int8,  # noqa: E402
                                      EFState, quantize_int8)
-from repro.optim.optimizer import clip_by_global_norm, global_norm
+from repro.optim.optimizer import clip_by_global_norm, global_norm  # noqa: E402
 
 _SETTINGS = dict(max_examples=25, deadline=None)
 

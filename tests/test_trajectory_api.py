@@ -7,8 +7,6 @@ observations) must match tightly; (b) the analytic solution of the paper's
 §4.1 toy; (c) the AOT memory artifact — MALI's residual set is the
 per-observation (z_k, v_k) pairs, independent of the per-segment step count.
 """
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
