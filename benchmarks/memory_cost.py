@@ -36,6 +36,26 @@ def _temp_bytes(method, solver, n_steps) -> int:
     return int(ma.temp_size_in_bytes) if ma else -1
 
 
+def _mali_backend_temp_bytes(backend: str, n_steps: int) -> int:
+    """Backward residual footprint of a MALI train step, per step-algebra
+    backend — the O(1)-in-steps property must survive kernel fusion (the
+    fused backward reconstructs in place exactly like the reference)."""
+    from repro.core import ALF, ConstantSteps, MALI, solve
+
+    params = {"w": jnp.ones((D,), jnp.float32) * 0.5,
+              "a": jnp.ones((D,), jnp.float32)}
+    z0 = jnp.ones((D,), jnp.float32)
+
+    def loss(p, z):
+        sol = solve(_f, p, z, 0.0, 1.0, solver=ALF(backend=backend),
+                    controller=ConstantSteps(n_steps), gradient=MALI())
+        return jnp.sum(sol.ys ** 2)
+
+    c = jax.jit(jax.grad(loss, argnums=(0, 1))).lower(params, z0).compile()
+    ma = c.memory_analysis()
+    return int(ma.temp_size_in_bytes) if ma else -1
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     for method, solver in METHOD_SOLVER:
@@ -49,4 +69,15 @@ def run() -> List[Row]:
         rows.append((f"memory/growth_{STEPS[0]}to{STEPS[-1]}/{method}",
                      growth,
                      "flat~1 expected for mali/adjoint; ~N_t for naive/aca"))
+    for backend in ("reference", "pallas"):
+        series = []
+        for n in STEPS:
+            b = _mali_backend_temp_bytes(backend, n)
+            series.append(b)
+            rows.append((f"memory/bwd_temp_bytes/mali_{backend}/n={n}", b,
+                         f"state={D}xf32"))
+        growth = series[-1] / max(series[0], 1)
+        rows.append(
+            (f"memory/bwd_growth_{STEPS[0]}to{STEPS[-1]}/mali_{backend}",
+             growth, "flat~1 expected: O(1)-in-steps survives fusion"))
     return rows

@@ -19,7 +19,34 @@ from .common import Row, mlp_field, mlp_field_init, spirals, time_fn
 N_STEPS = 8
 CONFIGS = (("mali", MALI(), ALF()), ("naive", Naive(), ALF()),
            ("aca", ACA(), HeunEuler()),
-           ("adjoint", Backsolve(), HeunEuler()))
+           ("adjoint", Backsolve(), HeunEuler()),
+           # the end-to-end fused train step: Pallas forward AND the fused
+           # inverse+VJP backward kernels (interpret mode on CPU, so the
+           # number is a correctness-of-the-path datapoint there, a perf
+           # one on TPU)
+           ("pallas_backward", MALI(), ALF(backend="pallas")))
+
+
+def _pallas_bwd_launches() -> int:
+    """Launches in one whole pallas MALI train step: 2 forward (midpoint +
+    update) + 2 backward (bwd_pre + bwd_post) — the roofline check that the
+    backward elementwise algebra collapsed to one launch per side of the
+    f-eval linearization."""
+    from repro.launch.hlo_cost import count_pallas_launches
+
+    params = {"w": jnp.ones((64,), jnp.float32)}
+
+    def f(p, z, t):
+        return jnp.tanh(p["w"] * z)
+
+    def loss(p, z):
+        return jnp.sum(solve(f, p, z, 0.0, 1.0,
+                             solver=ALF(backend="pallas"),
+                             controller=ConstantSteps(N_STEPS),
+                             gradient=MALI()).ys)
+
+    return count_pallas_launches(jax.grad(loss, argnums=(0, 1)), params,
+                                 jnp.ones((64,), jnp.float32))
 
 
 def run() -> List[Row]:
@@ -41,4 +68,9 @@ def run() -> List[Row]:
         us = time_fn(step, params)
         rows.append((f"speed/train_step_us/{name}", us,
                      f"n_steps={N_STEPS} batch=1024 (CPU relative)"))
+
+    rows.append(("speed/pallas_bwd_launches_per_step",
+                 float(_pallas_bwd_launches()),
+                 "whole train step: 2 fwd (midpoint+update) + 2 bwd "
+                 "(bwd_pre+bwd_post) expected"))
     return rows

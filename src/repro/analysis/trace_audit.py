@@ -9,8 +9,8 @@ Two instruments, neither of which touches a device:
   batch-first ``(B, T, ...)``, f32 states, int32 counters). Gradient
   combos run ``eval_shape(grad(...))`` — abstract reverse-mode catches
   residual/shape bugs in every custom_vjp without executing a step.
-  Known-invalid pairings (MALI x RungeKutta, ACA x ALF, Naive x Pallas
-  ALF) are asserted to raise their validation errors.
+  Known-invalid pairings (MALI x RungeKutta, ACA x ALF, adaptive Naive x
+  estimate-free RK4) are asserted to raise their validation errors.
 
 * **Retrace audit** — ``jax.jit(f).trace()`` is cached like execution is:
   tracing the same static config twice must run the Python body exactly
@@ -55,6 +55,7 @@ def _method_solver_pairs():
     return [
         ("mali/alf", MALI(), ALF()),
         ("mali/alf-eta0.9", MALI(), ALF(eta=0.9)),
+        ("mali/alf-pallas", MALI(), ALF(backend="pallas")),
         ("naive/alf", Naive(), ALF()),
         ("naive/heun_euler", Naive(), HeunEuler()),
         ("aca/heun_euler", ACA(), HeunEuler()),
@@ -142,7 +143,11 @@ def run_shape_audit():
                             HeunEuler)
     grad_cases = [
         ("grad/mali/alf", MALI(), ALF(), ConstantSteps(4)),
+        ("grad/mali/alf-pallas", MALI(), ALF(backend="pallas"),
+         ConstantSteps(4)),
         ("grad/naive/alf", Naive(), ALF(), AdaptiveController(1e-2, 1e-3, 8)),
+        ("grad/naive/alf-pallas", Naive(), ALF(backend="pallas"),
+         AdaptiveController(1e-2, 1e-3, 8)),
         ("grad/aca/heun_euler", ACA(), HeunEuler(),
          AdaptiveController(1e-2, 1e-3, 8)),
         ("grad/backsolve/dopri5", Backsolve(), Dopri5(), ConstantSteps(4)),
@@ -169,11 +174,14 @@ def run_shape_audit():
                                         g[key], spec.shape, spec.dtype))
 
     # Invalid pairings must be REJECTED at validation, not traced.
+    # (Naive x Pallas ALF is no longer here: the fused step ops carry
+    # custom_vjp rules now, so direct backprop through the launch is valid
+    # and audited in the grad cases above.)
+    from repro.core import Rk4
     invalid = [
         ("invalid/mali/dopri5", MALI(), Dopri5(), "ALF solver only"),
         ("invalid/aca/alf", ACA(), ALF(), "Runge-Kutta"),
-        ("invalid/naive/alf-pallas", Naive(), ALF(backend="pallas"),
-         "NO_REVERSE_RULE"),
+        ("invalid/naive-adaptive/rk4", Naive(), Rk4(), "error estimate"),
     ]
     for name, gradient, solver, needle in invalid:
         combos += 1

@@ -67,6 +67,7 @@ def alf_step(
     t: jax.Array,
     h: jax.Array,
     eta: float = 1.0,
+    backend: str = "reference",
 ) -> Tuple[Pytree, Pytree]:
     """One (damped) ALF step: (z, v) at time t -> (z', v') at time t + h.
 
@@ -76,8 +77,17 @@ def alf_step(
         u1    = f(k1, s1)
         v_out = v + 2*eta*(u1 - v)
         z_out = k1 + v_out * h/2
+
+    ``backend='pallas'`` fuses the elementwise algebra around the ``f``
+    evaluation into two kernel launches; the ops carry closed-form
+    custom_vjp rules, so this path is reverse-differentiable too.
     """
     s1 = t + h / 2
+    if backend == "pallas":
+        from repro.kernels.alf_step.ops import alf_midpoint, alf_update
+        k1 = alf_midpoint(z, v, h, use_pallas=True)
+        u1 = f(params, k1, s1)
+        return alf_update(k1, v, u1, h, eta=eta, use_pallas=True)
     k1 = _tm(lambda zi, vi: zi + vi * (h / 2), z, v)
     u1 = f(params, k1, s1)
     v_out = _tm(lambda vi, ui: vi + 2.0 * eta * (ui - vi), v, u1)
@@ -93,6 +103,7 @@ def alf_inverse(
     t_out: jax.Array,
     h: jax.Array,
     eta: float = 1.0,
+    backend: str = "reference",
 ) -> Tuple[Pytree, Pytree]:
     """Exact inverse of :func:`alf_step` (paper Algo 3 / Appendix Algo 3).
 
@@ -100,8 +111,19 @@ def alf_inverse(
     output. Exact up to float rounding: the midpoint ``k1`` is recovered
     algebraically, so ``f`` is re-evaluated at (numerically) the same point
     as in the forward step.
+
+    ``backend='pallas'`` fuses the reconstruction into two launches: the
+    midpoint kernel (to evaluate ``f``) and the one-pass ``alf_inverse``
+    kernel for the whole (z_in, v_in) recovery. Forward-only by design —
+    it runs inside MALI's backward, which is never differentiated.
     """
     s1 = t_out - h / 2
+    if backend == "pallas":
+        from repro.kernels.alf_step.ops import alf_inverse as alf_inverse_op
+        from repro.kernels.alf_step.ops import alf_midpoint
+        k1 = alf_midpoint(z_out, v_out, h, sign=-1.0, use_pallas=True)
+        u1 = f(params, k1, s1)
+        return alf_inverse_op(z_out, v_out, u1, h, eta=eta, use_pallas=True)
     k1 = _tm(lambda zi, vi: zi - vi * (h / 2), z_out, v_out)
     u1 = f(params, k1, s1)
     if eta == 1.0:
@@ -135,10 +157,11 @@ def alf_step_with_error(
     ``backend='pallas'`` routes the elementwise algebra around the ``f``
     evaluation through the fused :mod:`repro.kernels.alf_step` kernels
     (one flattened [rows, 128] pass over the whole state pytree; interpret
-    mode on CPU, compiled on TPU). The kernel launch is not
-    reverse-differentiable in interpret mode — it is only reached from
-    custom_vjp forwards (MALI) and non-differentiated re-integrations
-    (Backsolve), never from direct backprop (Naive validates this away).
+    mode on CPU, compiled on TPU). The ops carry closed-form custom_vjp
+    rules (themselves fused kernels), so every gradient consumer accepts
+    this backend: MALI dispatches the fused inverse+VJP backward kernels,
+    and direct backprop (Naive, ``SaveAt(steps=True)``, dense output)
+    differentiates straight through the launches.
     """
     s1 = t + h / 2
     if backend == "pallas":

@@ -72,26 +72,58 @@ def _traj_row(traj: Pytree, k: int) -> Pytree:
 
 def _step_backward(cfg: MaliConfig, params, z_i, v_i, t_start, h, a_z, a_v):
     """One reverse step: reconstruct the step input via psi^-1 and backprop
-    psi, either fused (3 f-eval-equivalents) or via the reference two-pass."""
+    psi, either fused (3 f-eval-equivalents) or via the reference two-pass.
+    ``backend='pallas'`` dispatches the fused backward kernels: the whole
+    elementwise algebra collapses to one launch on each side of the step's
+    f-eval linearization (alf_bwd_pre / alf_bwd_post)."""
     if cfg.fused_bwd:
+        if cfg.backend == "pallas":
+            return _pallas_fused_inverse_and_vjp(cfg.f, cfg.eta, params,
+                                                 z_i, v_i, t_start + h, h,
+                                                 a_z, a_v)
         return _fused_inverse_and_vjp(cfg.f, cfg.eta, params, z_i, v_i,
                                       t_start + h, h, a_z, a_v)
     z_prev, v_prev = alf_inverse(cfg.f, params, z_i, v_i, t_start + h, h,
-                                 cfg.eta)
+                                 cfg.eta, cfg.backend)
     dp, dz, dv = _local_step_vjp(cfg.f, cfg.eta, params, z_prev, v_prev,
-                                 t_start, h, a_z, a_v)
+                                 t_start, h, a_z, a_v, cfg.backend)
     return z_prev, v_prev, dz, dv, dp
 
 
-def _local_step_vjp(f, eta, params, z_prev, v_prev, t_prev, h, a_z, a_v):
+def _local_step_vjp(f, eta, params, z_prev, v_prev, t_prev, h, a_z, a_v,
+                    backend="reference"):
     """VJP of one ALF step at the reconstructed input state (reference
     path: re-plays psi under jax.vjp; kept as the oracle for the fused
-    implementation below)."""
+    implementation below). With ``backend='pallas'`` the replayed step
+    launches the fused kernels and jax.vjp differentiates through their
+    closed-form custom_vjp rules — the same machinery Naive() uses."""
     def step_fn(p, z, v):
-        return alf_step(f, p, z, v, t_prev, h, eta)
+        return alf_step(f, p, z, v, t_prev, h, eta, backend)
 
     _, vjp_fn = jax.vjp(step_fn, params, z_prev, v_prev)
     return vjp_fn((a_z, a_v))  # (dL/dparams, dL/dz_prev, dL/dv_prev)
+
+
+def _pallas_fused_inverse_and_vjp(f, eta, params, z_i, v_i, t_i, h, a_z,
+                                  a_v):
+    """The fused backward step of :func:`_fused_inverse_and_vjp` with its
+    elementwise algebra as TWO Pallas launches instead of ~10 per-leaf jnp
+    ops: ``alf_bwd_pre`` emits the inverse midpoint k1 AND the f-eval
+    cotangent cot_u1 = 2*eta*(a_v + (h/2)*a_z) — which depends only on the
+    adjoints, so it is available BEFORE the linearization — then one shared
+    ``jax.vjp`` of f provides (u1, dparams, dk1), and ``alf_bwd_post``
+    finishes both the psi^-1 reconstruction and the adjoint propagation.
+    The f-evaluation VJP itself stays in JAX (it is the model's business,
+    not the integrator's)."""
+    from repro.kernels.alf_step.ops import alf_bwd_post, alf_bwd_pre
+    s1 = t_i - h / 2
+    k1, cot_u1 = alf_bwd_pre(z_i, v_i, a_z, a_v, h, eta=eta,
+                             use_pallas=True)
+    u1, vjp_f = jax.vjp(lambda p, kk: f(p, kk, s1), params, k1)
+    dparams, dk1 = vjp_f(cot_u1)
+    z_prev, v_prev, dz_prev, dv_prev = alf_bwd_post(
+        k1, v_i, u1, a_z, a_v, dk1, h, eta=eta, use_pallas=True)
+    return z_prev, v_prev, dz_prev, dv_prev, dparams
 
 
 def _fused_inverse_and_vjp(f, eta, params, z_i, v_i, t_i, h, a_z, a_v):
@@ -152,8 +184,9 @@ def _mali_forward(cfg: MaliConfig, params, z0, ts):
 
     The forward runs inside the custom_vjp primal — never differentiated
     through — so cfg.backend may route the step algebra through the fused
-    Pallas kernels; the backward sweep stays on the reference path (its
-    inverse+VJP algebra is hand-fused already, see _fused_inverse_and_vjp).
+    Pallas kernels; the backward sweep honors the same backend, dispatching
+    the fused inverse+VJP kernels (_pallas_fused_inverse_and_vjp) or the
+    hand-fused jnp reference (_fused_inverse_and_vjp).
     """
     v0 = init_velocity(cfg.f, params, z0, ts[0])
 

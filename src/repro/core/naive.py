@@ -31,6 +31,28 @@ Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
 
 
+def check_direct_backprop(solver: Solver, consumer: str) -> None:
+    """Refuse solvers whose trial step dispatches forward-only kernel ops.
+
+    Consumers that backpropagate directly through the recorded step sequence
+    (``Naive()``, ``SaveAt(steps=True)``, dense output) call this instead of
+    hardcoding per-solver knowledge: the solver reports the kernel ops its
+    step launches (:meth:`Solver.pallas_step_ops`) and each is looked up in
+    the central ``NO_REVERSE_RULE`` registry. Ops carrying a custom_vjp are
+    absent there and pass; a future VJP-less op is rejected automatically,
+    with its reviewed justification in the error."""
+    from repro.kernels.registry import no_reverse_reason
+    blocked = [(op, no_reverse_reason(op)) for op in solver.pallas_step_ops()]
+    blocked = [(op, r) for op, r in blocked if r is not None]
+    if blocked:
+        detail = "; ".join(f"{op} (NO_REVERSE_RULE: {r})"
+                           for op, r in blocked)
+        raise ValueError(
+            f"{consumer} backpropagates directly through the recorded step "
+            f"sequence, but solver {solver.name!r} dispatches forward-only "
+            f"kernel op(s): {detail}")
+
+
 @dataclasses.dataclass(frozen=True)
 class Naive(GradientMethod):
     """Direct backprop through the integration loop (Table 1 'naive' row):
@@ -48,20 +70,7 @@ class Naive(GradientMethod):
 
     def validate(self, solver, controller) -> None:
         super().validate(solver, controller)
-        if isinstance(solver, ALF) and solver.backend == "pallas":
-            # The forward-only contract is recorded centrally: the Pallas
-            # ALF step ops are in the NO_REVERSE_RULE allowlist, so direct
-            # backprop through the launch is refused here, with the
-            # registry's reviewed justification in the error.
-            from repro.kernels.registry import no_reverse_reason
-            reason = no_reverse_reason("alf_step.alf_update")
-            raise ValueError(
-                "Naive() backpropagates directly through every solver "
-                "step, but the Pallas ALF step ops are registered "
-                f"forward-only (NO_REVERSE_RULE: {reason}); use "
-                "ALF(backend='reference') with Naive(), or keep "
-                "backend='pallas' with MALI()/Backsolve() (their backward "
-                "passes never differentiate the forward kernel launch)")
+        check_direct_backprop(solver, "Naive()")
 
     def integrate(self, f, params, z0, ts, solver, controller):
         state0 = solver.init_state(f, params, z0, ts[0])

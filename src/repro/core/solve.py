@@ -62,7 +62,7 @@ from .interface import (Batching, Event, GradientMethod, Lockstep, PerSample,
                         RunStats, SaveAt, Sharded, Solution, Stats,
                         batch_size, make_run_stats, state_nbytes)
 from .mali import MALI
-from .naive import Naive
+from .naive import Naive, check_direct_backprop as _check_direct_backprop
 from .solvers import ALF, Solver, get_solver
 from .stepsize import AdaptiveController, StepController
 
@@ -87,20 +87,6 @@ def _build_stats(rstats: RunStats, gradient: GradientMethod, z0: Pytree,
         n_segments=n_obs - 1,
         residual_bytes=gradient.residual_bytes(z0, n_obs, solver, controller),
     )
-
-
-def _check_direct_backprop(solver: Solver, mode: str) -> None:
-    if isinstance(solver, ALF) and solver.backend == "pallas":
-        # Consult the kernel layer's forward-only registry rather than
-        # hardcoding the contract here (odelint R003 keeps the registry in
-        # sync with the ops that actually lack a VJP).
-        from repro.kernels.registry import no_reverse_reason
-        reason = no_reverse_reason("alf_step.alf_update")
-        raise ValueError(
-            f"{mode} backpropagates directly through the recorded step "
-            f"sequence, but the Pallas ALF step ops are registered "
-            f"forward-only (NO_REVERSE_RULE: {reason}); use "
-            f"ALF(backend='reference') for per-step recording")
 
 
 def _record_span(f, params, z0, t0, t1, solver, controller):

@@ -155,6 +155,14 @@ class Solver:
     def trial_fn(self, f: Dynamics, params: Pytree, controller) -> TrialFn:
         raise NotImplementedError
 
+    def pallas_step_ops(self) -> Tuple[str, ...]:
+        """Kernel-registry qualnames ("<package>.<op>") of the Pallas ops
+        this solver's trial step launches; () when the step is pure jnp.
+        Direct-backprop consumers (:func:`repro.core.naive.
+        check_direct_backprop`) look each one up in ``NO_REVERSE_RULE`` and
+        refuse the solver if any is recorded forward-only."""
+        return ()
+
     def interpolant(self, f: Dynamics, params: Pytree, states: Pytree,
                     state_end: Pytree, ts: jax.Array, hs: jax.Array,
                     n_live: jax.Array):
@@ -234,9 +242,10 @@ class ALF(Solver):
     lane-aligned pass over the whole state pytree per step; interpret mode
     on CPU, compiled on TPU) instead of per-leaf jnp ops. The kernel is
     numerically identical and kernel-vs-reference parity is enforced in
-    tests; direct-backprop consumers (``Naive``, dense ``SaveAt(steps=
-    True)``) reject it because the interpret-mode launch has no reverse
-    rule."""
+    tests. The step ops carry closed-form custom_vjp rules, so every
+    gradient consumer accepts this backend: MALI's backward dispatches the
+    fused inverse+VJP kernels, and direct backprop (``Naive``, dense
+    ``SaveAt(steps=True)``) differentiates through the launches."""
 
     eta: float = 1.0
     backend: str = "reference"
@@ -264,6 +273,11 @@ class ALF(Solver):
             return (z1, v1), controller.error_ratio(err, z, z1)
 
         return trial
+
+    def pallas_step_ops(self) -> Tuple[str, ...]:
+        if self.backend != "pallas":
+            return ()
+        return ("alf_step.alf_midpoint", "alf_step.alf_update")
 
     def interpolant(self, f, params, states, state_end, ts, hs, n_live):
         """ALF dense output from the velocity pair: the augmented state

@@ -4,24 +4,41 @@ These are the elementwise algebra of paper Algo 2/3 *between* the two f
 evaluations — the part MALI executes once per step in forward and twice per
 step (inverse + replay) in backward. Fusing them avoids ~6 HBM round-trips
 of the full model state per solver step on TPU.
+
+Backward algebra (this file is the oracle for the fused backward kernels):
+the ALF step is linear in state except for the single f evaluation, so its
+cotangent rules are closed-form. With ``g_z``/``g_v`` the output cotangents
+of one forward step and ``a_z``/``a_v`` MALI's adjoint state:
+
+    cot_vout = g_v + (h/2) * g_z          # v_out feeds z_out with weight h/2
+    k1_bar   = g_z                        # identity (handled by callers)
+    v_bar    = (1 - 2*eta) * cot_vout
+    u1_bar   = 2*eta * cot_vout           # the cotangent handed to vjp(f)
+
+Compute dtype: ``_acc`` promotes the storage dtype to at least float32 —
+bf16 leaves accumulate in f32 and are cast back at the write, while float64
+states (x64 mode) stay in f64 end to end instead of rounding through f32.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def _acc(x):
+    """Storage dtype -> compute dtype: f32 accumulation for sub-f32
+    storage; f64 is preserved (never rounded through f32)."""
+    return x.astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
 def midpoint_ref(z: jnp.ndarray, v: jnp.ndarray, h, sign: float = 1.0):
     """k1 = z + sign * v * h/2 (sign=-1 gives the inverse's midpoint)."""
-    return (z.astype(jnp.float32)
-            + sign * v.astype(jnp.float32) * (h / 2)).astype(z.dtype)
+    return (_acc(z) + sign * _acc(v) * (h / 2)).astype(z.dtype)
 
 
 def update_ref(k1: jnp.ndarray, v: jnp.ndarray, u1: jnp.ndarray, h,
                eta: float = 1.0):
     """Forward tail: v_out = v + 2*eta*(u1 - v); z_out = k1 + v_out*h/2."""
-    k1f = k1.astype(jnp.float32)
-    vf = v.astype(jnp.float32)
-    uf = u1.astype(jnp.float32)
+    k1f, vf, uf = _acc(k1), _acc(v), _acc(u1)
     v_out = vf + 2.0 * eta * (uf - vf)
     z_out = k1f + v_out * (h / 2)
     return z_out.astype(k1.dtype), v_out.astype(v.dtype)
@@ -30,12 +47,70 @@ def update_ref(k1: jnp.ndarray, v: jnp.ndarray, u1: jnp.ndarray, h,
 def inverse_update_ref(k1: jnp.ndarray, v_out: jnp.ndarray, u1: jnp.ndarray,
                        h, eta: float = 1.0):
     """Inverse tail: v_in from (u1, v_out); z_in = k1 - v_in*h/2."""
-    k1f = k1.astype(jnp.float32)
-    vf = v_out.astype(jnp.float32)
-    uf = u1.astype(jnp.float32)
+    k1f, vf, uf = _acc(k1), _acc(v_out), _acc(u1)
     if eta == 1.0:
         v_in = 2.0 * uf - vf
     else:
         v_in = (vf - 2.0 * eta * uf) / (1.0 - 2.0 * eta)
     z_in = k1f - v_in * (h / 2)
     return z_in.astype(k1.dtype), v_in.astype(v_out.dtype)
+
+
+def inverse_ref(z_out: jnp.ndarray, v_out: jnp.ndarray, u1: jnp.ndarray, h,
+                eta: float = 1.0):
+    """Full psi^-1 in one pass: recover (z_in, v_in) from the step output,
+    re-deriving the midpoint k1 = z_out - v_out*h/2 internally (Algo 3)."""
+    zf, vf, uf = _acc(z_out), _acc(v_out), _acc(u1)
+    k1 = zf - vf * (h / 2)
+    if eta == 1.0:
+        v_in = 2.0 * uf - vf
+    else:
+        v_in = (vf - 2.0 * eta * uf) / (1.0 - 2.0 * eta)
+    z_in = k1 - v_in * (h / 2)
+    return z_in.astype(z_out.dtype), v_in.astype(v_out.dtype)
+
+
+def midpoint_vjp_ref(g: jnp.ndarray, h, sign: float = 1.0):
+    """v-cotangent of the midpoint: v_bar = sign * (h/2) * g (z_bar = g
+    is the identity and stays with the caller)."""
+    return (sign * _acc(g) * (h / 2)).astype(g.dtype)
+
+
+def update_vjp_ref(g_z: jnp.ndarray, g_v: jnp.ndarray, h, eta: float = 1.0):
+    """(v_bar, u1_bar) cotangents of the forward tail (k1_bar = g_z is the
+    identity and stays with the caller)."""
+    cot_vout = _acc(g_v) + _acc(g_z) * (h / 2)
+    v_bar = (1.0 - 2.0 * eta) * cot_vout
+    u1_bar = 2.0 * eta * cot_vout
+    return v_bar.astype(g_v.dtype), u1_bar.astype(g_v.dtype)
+
+
+def bwd_pre_ref(z: jnp.ndarray, v: jnp.ndarray, a_z: jnp.ndarray,
+                a_v: jnp.ndarray, h, eta: float = 1.0):
+    """Head of one MALI backward step, fused: the inverse's midpoint
+    k1 = z - v*h/2 AND the f-eval cotangent u1_bar = 2*eta*(a_v + (h/2)*a_z)
+    — the latter depends only on the adjoints, so it is ready *before* the
+    f linearization runs."""
+    k1 = _acc(z) - _acc(v) * (h / 2)
+    cot_u1 = 2.0 * eta * (_acc(a_v) + _acc(a_z) * (h / 2))
+    return k1.astype(z.dtype), cot_u1.astype(a_z.dtype)
+
+
+def bwd_post_ref(k1: jnp.ndarray, v_out: jnp.ndarray, u1: jnp.ndarray,
+                 a_z: jnp.ndarray, a_v: jnp.ndarray, dk1: jnp.ndarray,
+                 h, eta: float = 1.0):
+    """Tail of one MALI backward step, fused: the psi^-1 reconstruction
+    (z_prev, v_prev) AND the propagated adjoints (dz_prev, dv_prev), given
+    dk1 = vjp_f(u1_bar) from the shared f linearization."""
+    k1f, vf, uf = _acc(k1), _acc(v_out), _acc(u1)
+    azf, avf, dkf = _acc(a_z), _acc(a_v), _acc(dk1)
+    if eta == 1.0:
+        v_prev = 2.0 * uf - vf
+    else:
+        v_prev = (vf - 2.0 * eta * uf) / (1.0 - 2.0 * eta)
+    z_prev = k1f - v_prev * (h / 2)
+    cot_k1 = azf + dkf
+    cot_vout = avf + azf * (h / 2)
+    dv_prev = cot_k1 * (h / 2) + (1.0 - 2.0 * eta) * cot_vout
+    return (z_prev.astype(k1.dtype), v_prev.astype(v_out.dtype),
+            cot_k1.astype(a_z.dtype), dv_prev.astype(a_v.dtype))

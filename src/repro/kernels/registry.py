@@ -8,12 +8,13 @@ launch is either impossible (interpret-mode ``pallas_call`` has no
 transpose rule) or deliberately avoided because the surrounding gradient
 method never needs it.
 
-``GradientMethod`` validation reads this registry
-(:meth:`repro.core.naive.Naive.validate`,
-:func:`repro.core.solve._check_direct_backprop`): a method that
-backpropagates directly through recorded solver steps must refuse a solver
-backend whose step ops are allowlisted here, instead of silently tracing a
-launch that AD cannot transpose.
+``GradientMethod`` validation reads this registry through
+:func:`repro.core.naive.check_direct_backprop`: a method that
+backpropagates directly through recorded solver steps looks up every op
+the solver's trial step dispatches (``Solver.pallas_step_ops``) and
+refuses any that is allowlisted here — with the recorded justification —
+instead of silently tracing a launch that AD cannot transpose. Ops with a
+``custom_vjp`` are absent from this dict and pass.
 
 This module is import-light on purpose (no jax, no kernel imports) so
 ``repro.core`` can read it without a circular dependency.
@@ -26,18 +27,26 @@ from typing import Optional
 # justification with the entry (R003 rejects empty/placeholder reasons):
 # these strings are the reviewed record of WHY forward-only is sound.
 NO_REVERSE_RULE = {
-    # ALF fused state updates: MALI reconstructs states by running the
-    # algebraically exact inverse update (Algo 3) instead of differentiating
-    # the forward launch; Naive() must (and does) reject backend='pallas'.
-    "alf_step.alf_midpoint":
-        "MALI inverts the leapfrog algebraically (alf_inverse_update); the "
-        "backward pass re-derives k1 and never transposes the launch",
-    "alf_step.alf_update":
-        "reverse-accurate gradient comes from state reconstruction, not AD "
-        "through the kernel; Naive.validate rejects the pallas backend",
+    # ALF fused state updates: the *forward* ops (alf_midpoint, alf_update)
+    # now carry closed-form custom_vjp rules — fused VJP kernels — so they
+    # are deliberately ABSENT here and direct backprop (Naive, dense
+    # SaveAt) accepts backend='pallas'. Only the backward-sweep ops below
+    # stay forward-only: they are MALI's backward.
+    "alf_step.alf_inverse":
+        "psi^-1 reconstruction op; only ever called inside custom_vjp "
+        "backward sweeps, which are themselves never differentiated (no "
+        "double-backward support)",
     "alf_step.alf_inverse_update":
         "only ever called inside custom_vjp backward sweeps, which are "
         "themselves never differentiated (no double-backward support)",
+    "alf_step.alf_bwd_pre":
+        "fused head of one MALI backward step (inverse midpoint + f-eval "
+        "cotangent); lives inside _mali_grid_bwd and is never itself "
+        "differentiated",
+    "alf_step.alf_bwd_post":
+        "fused tail of one MALI backward step (inverse tail + adjoint "
+        "propagation); lives inside _mali_grid_bwd and is never itself "
+        "differentiated",
     # Transformer/SSM serving kernels: inference-path only. Training uses
     # the jnp oracle implementations, which AD handles natively.
     "flash_attention.flash_attention":

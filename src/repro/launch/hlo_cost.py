@@ -262,3 +262,47 @@ def analyze_hlo(hlo: str) -> CompCost:
         return total
 
     return cost_of(entry)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-launch accounting (jaxpr level)
+# ---------------------------------------------------------------------------
+# On CPU, interpret-mode pallas_call lowers to plain HLO, so launches are
+# invisible in compiled HLO text; the stable place to count them is the
+# jaxpr, where each launch is one `pallas_call` primitive regardless of
+# target. This is the roofline check that a fused op really IS one launch —
+# e.g. one fused MALI backward step must show exactly two (alf_bwd_pre +
+# alf_bwd_post, one on each side of the f-eval linearization).
+
+def _sub_jaxprs(params):
+    """Yield every sub-jaxpr reachable from one eqn's params (pjit/closed
+    jaxprs, scan bodies, cond branches — tuples/lists included)."""
+    for val in params.values():
+        stack = [val]
+        while stack:
+            v = stack.pop()
+            if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                stack.append(v.jaxpr)
+            elif hasattr(v, "eqns"):
+                yield v
+            elif isinstance(v, (tuple, list)):
+                stack.extend(v)
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for sub in _sub_jaxprs(eqn.params):
+            n += _count_pallas(sub)
+    return n
+
+
+def count_pallas_launches(fn, *args) -> int:
+    """Number of pallas_call launches in one trace of ``fn(*args)``
+    (recursing through pjit/scan/cond sub-jaxprs; scan bodies count ONCE —
+    this is launches per traced program region, i.e. per step for a
+    per-step function)."""
+    import jax  # lazy so the text-only cost model stays jax-free
+    return _count_pallas(jax.make_jaxpr(fn)(*args).jaxpr)

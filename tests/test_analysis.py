@@ -236,6 +236,70 @@ def test_r003_placeholder_justification_caught():
     assert any("placeholder" in v.message for v in vs)
 
 
+OPS_DELEGATED = """
+import functools
+import jax
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _impl(flag, x):
+    return x
+
+def _impl_fwd(flag, x):
+    return _impl(flag, x), None
+
+def _impl_bwd(flag, res, g):
+    return (g,)
+
+_impl.defvjp(_impl_fwd, _impl_bwd)
+
+def my_op(x, *, flag=True):
+    return _impl(flag, x)
+"""
+
+OPS_DELEGATED_BAD = """
+import functools
+import jax
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _impl(flag, x):
+    return x
+
+def _impl_fwd(flag, x):
+    return _impl(flag, x), None
+
+def _impl_bwd(flag, res, g):
+    return (g,)
+
+_impl.defvjp(_impl_fwd, _impl_bwd)
+
+def _plain_helper(x):
+    return x
+
+def my_op(x, *, flag=True):
+    return _plain_helper(x)
+"""
+
+
+def test_r003_defvjp_delegation_passes():
+    """The keyword-facade pattern: a public op delegating to an internal
+    custom_vjp owner (recognized by its X.defvjp registration) needs no
+    allowlist entry — it inherits the owner's reverse rule."""
+    vs = lint_source(OPS_DELEGATED, path="kernels/demo/ops.py",
+                     rules=["R003"],
+                     ctx={"kernel_package": "demo", "no_reverse_rule": {}})
+    assert vs == []
+
+
+def test_r003_delegation_to_plain_helper_still_caught():
+    """Merely *containing* a defvjp owner somewhere in the module is not
+    enough — the public op must actually call it."""
+    vs = lint_source(OPS_DELEGATED_BAD, path="kernels/demo/ops.py",
+                     rules=["R003"],
+                     ctx={"kernel_package": "demo", "no_reverse_rule": {}})
+    assert any("my_op" in v.message and "NO_REVERSE_RULE" in v.message
+               for v in vs)
+
+
 # --------------------------------------------------------------------------
 # R004 — registry completeness
 # --------------------------------------------------------------------------

@@ -125,6 +125,134 @@ def test_alf_solver_pallas_backend_parity():
     np.testing.assert_allclose(float(ratio), float(ref_ratio), rtol=1e-6)
 
 
+@pytest.mark.parametrize("shapes", ALF_STATES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("eta", [1.0, 0.8])
+def test_alf_backward_kernels_vs_ref(shapes, dtype, eta):
+    """The MALI-backward ops (alf_inverse, alf_bwd_pre, alf_bwd_post):
+    Pallas vs jnp-oracle parity over the same state sweep as the forward."""
+    keys = jax.random.split(jax.random.PRNGKey(21), 6 * len(shapes))
+    mk = lambda i: {k: _rand(keys[i * len(shapes) + j], s, dtype)
+                    for j, (k, s) in enumerate(shapes.items())}
+    z, v, u, a_z, a_v, dk1 = (mk(i) for i in range(6))
+    h = jnp.float32(0.23)
+
+    def check(got, want):
+        for g, w in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            assert g.dtype == w.dtype
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       **_tol(dtype))
+
+    check(alf_ops.alf_inverse(z, v, u, h, eta=eta, use_pallas=True),
+          alf_ops.alf_inverse(z, v, u, h, eta=eta, use_pallas=False))
+    check(alf_ops.alf_bwd_pre(z, v, a_z, a_v, h, eta=eta, use_pallas=True),
+          alf_ops.alf_bwd_pre(z, v, a_z, a_v, h, eta=eta, use_pallas=False))
+    check(alf_ops.alf_bwd_post(z, v, u, a_z, a_v, dk1, h, eta=eta,
+                               use_pallas=True),
+          alf_ops.alf_bwd_post(z, v, u, a_z, a_v, dk1, h, eta=eta,
+                               use_pallas=False))
+
+
+def test_alf_kernel_step_inverse_roundtrip():
+    """Pallas step followed by the ONE-PASS Pallas psi^-1 (alf_inverse,
+    which re-derives k1 internally) recovers (z, v) to float rounding."""
+    z = {"s": jnp.linspace(-1, 1, 384, dtype=jnp.float32)}
+    v = {"s": jnp.cos(jnp.linspace(0, 3, 384, dtype=jnp.float32))}
+    u = {"s": jnp.sin(jnp.linspace(0, 5, 384, dtype=jnp.float32))}
+    h = jnp.float32(0.11)
+    for eta in (1.0, 0.8):
+        k1 = alf_ops.alf_midpoint(z, v, h, use_pallas=True)
+        zo, vo = alf_ops.alf_update(k1, v, u, h, eta=eta, use_pallas=True)
+        # the true inverse re-evaluates f at k1; feeding the forward's u1
+        # makes the algebraic roundtrip exact
+        zi, vi = alf_ops.alf_inverse(zo, vo, u, h, eta=eta, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(zi["s"]), np.asarray(z["s"]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vi["s"]), np.asarray(v["s"]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_alf_forward_ops_custom_vjp_vs_jnp():
+    """jax.grad through the Pallas alf_midpoint + alf_update launches (the
+    closed-form custom_vjp rules, themselves fused kernels) vs the plain
+    jnp formula — including the h cotangent, which adaptive controllers
+    feed back into states/params."""
+    eta = 0.9
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    z = {"a": _rand(keys[0], (3, 200), jnp.float32)}
+    v = {"a": _rand(keys[1], (3, 200), jnp.float32)}
+    u = {"a": _rand(keys[2], (3, 200), jnp.float32)}
+    h = jnp.float32(0.17)
+
+    def loss_pallas(z, v, u, h):
+        k1 = alf_ops.alf_midpoint(z, v, h, use_pallas=True)
+        zo, vo = alf_ops.alf_update(k1, v, u, h, eta=eta, use_pallas=True)
+        return jnp.sum(zo["a"] ** 2) + jnp.sum(jnp.sin(vo["a"]))
+
+    def loss_jnp(z, v, u, h):
+        k1 = {"a": z["a"] + v["a"] * (h / 2)}
+        vo = {"a": v["a"] + 2.0 * eta * (u["a"] - v["a"])}
+        zo = {"a": k1["a"] + vo["a"] * (h / 2)}
+        return jnp.sum(zo["a"] ** 2) + jnp.sum(jnp.sin(vo["a"]))
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(z, v, u, h)
+    gj = jax.grad(loss_jnp, argnums=(0, 1, 2, 3))(z, v, u, h)
+    for g, w in zip(jax.tree_util.tree_leaves(gp),
+                    jax.tree_util.tree_leaves(gj)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_alf_ops_mixed_dtype_tree():
+    """A {f32, bf16} mixed tree: one fused launch at the promoted common
+    dtype, every output leaf restored to its own input dtype (the old
+    _flatten force-cast to f32 silently upcast bf16 leaves)."""
+    z = {"big": jnp.ones((2, 128), jnp.float32),
+         "small": jnp.full((63,), 0.5, jnp.bfloat16)}
+    v = {"big": jnp.full((2, 128), 0.25, jnp.float32),
+         "small": jnp.full((63,), -0.5, jnp.bfloat16)}
+    h = jnp.float32(0.2)
+    for use_pallas in (True, False):
+        k1 = alf_ops.alf_midpoint(z, v, h, use_pallas=use_pallas)
+        assert k1["big"].dtype == jnp.float32
+        assert k1["small"].dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(k1["big"]), 1.025, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(k1["small"], np.float32),
+                                   0.45, rtol=2e-2)
+        # gradients keep per-leaf dtypes too (cotangent avals == primal)
+        g = jax.grad(lambda zz, vv: jnp.sum(
+            alf_ops.alf_midpoint(zz, vv, h,
+                                 use_pallas=use_pallas)["big"]) +
+            jnp.sum(alf_ops.alf_midpoint(
+                zz, vv, h, use_pallas=use_pallas)["small"]
+                .astype(jnp.float32)), argnums=(0, 1))(z, v)
+        assert g[0]["small"].dtype == jnp.bfloat16
+        assert g[1]["big"].dtype == jnp.float32
+
+
+def test_alf_ops_preserve_float64():
+    """Under x64, f64 state trees stay f64 through the fused launch (the
+    old _flatten force-cast every leaf to f32 and lost the precision)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        z = {"s": jnp.linspace(-1, 1, 200, dtype=jnp.float64)}
+        v = {"s": jnp.cos(jnp.linspace(0, 3, 200, dtype=jnp.float64))}
+        u = {"s": jnp.sin(jnp.linspace(0, 5, 200, dtype=jnp.float64))}
+        h = jnp.float64(0.1)
+        k1 = alf_ops.alf_midpoint(z, v, h, use_pallas=True)
+        zo, vo = alf_ops.alf_update(k1, v, u, h, eta=0.8, use_pallas=True)
+        assert zo["s"].dtype == jnp.float64
+        assert vo["s"].dtype == jnp.float64
+        want = np.asarray(z["s"], np.float64) \
+            + np.asarray(v["s"], np.float64) * 0.05
+        # f64 parity to ~1e-15: would fail at ~1e-7 under an f32 round-trip
+        np.testing.assert_allclose(np.asarray(k1["s"]), want, rtol=1e-14)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention (Pallas-device only: interpret mode cannot emulate these
 # kernels on CPU with current jax — see the requires_pallas_device marker)

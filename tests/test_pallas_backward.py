@@ -1,0 +1,245 @@
+"""The closed Pallas loop: fused MALI backward kernels + direct backprop
+through the forward launches.
+
+Covers the full gradient story of ALF(backend='pallas'):
+
+* MALI gradient parity (pallas vs reference) across controller x direction
+  x fused_bwd, at <= 1e-6 combined relative error;
+* Naive(), SaveAt(steps=True) and SaveAt(dense=True) now ACCEPT the pallas
+  backend (the forward ops carry closed-form custom_vjp rules) and their
+  gradients match the reference backend;
+* the NO_REVERSE_RULE registry reflects the new contract (forward ops
+  absent, backward-sweep ops present) and a future VJP-less step op is
+  still rejected with its recorded justification;
+* launch accounting: one fused MALI backward step is exactly TWO
+  pallas_call launches (alf_bwd_pre / alf_bwd_post, one on each side of
+  the f-eval linearization), the forward step is two, the reference
+  backend zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ALF, MALI, AdaptiveController, ConstantSteps, Naive,
+                        SaveAt, solve)
+
+_tl = jax.tree_util.tree_leaves
+
+
+def _f(params, z, t):
+    return -params["a"] * z + jnp.sin(t) * params["b"]
+
+
+def _params():
+    return {"a": jnp.float32(8.0), "b": jnp.float32(0.5)}
+
+
+def _z0():
+    return jnp.linspace(0.3, 1.0, 5).astype(jnp.float32)
+
+
+def _rel(got, want):
+    fa = jnp.concatenate([x.reshape(-1) for t in got for x in _tl(t)])
+    fb = jnp.concatenate([x.reshape(-1) for t in want for x in _tl(t)])
+    return float(jnp.linalg.norm(fa - fb) / (jnp.linalg.norm(fb) + 1e-30))
+
+
+def _assert_grads_match(got, want, rtol=1e-6, atol=2e-8):
+    """Per-leaf <= rtol relative parity, with a tiny absolute floor for
+    entries that are themselves ~0 (stiff decay makes some dL/dz0 entries
+    cross zero, where pure relative error is meaningless)."""
+    for g, w in zip(_tl(got), _tl(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol)
+
+
+def _grad(solver, gradient, controller, t0, t1, saveat=None):
+    def loss(p, z):
+        sol = solve(_f, p, z, t0, t1, solver=solver, controller=controller,
+                    gradient=gradient, saveat=saveat)
+        return jnp.sum(sol.ys ** 2)
+    return jax.grad(loss, argnums=(0, 1))(_params(), _z0())
+
+
+@pytest.mark.parametrize("controller", [ConstantSteps(16),
+                                        AdaptiveController(1e-3, 1e-4, 32)],
+                         ids=["const16", "adaptive"])
+@pytest.mark.parametrize("span", [(0.0, 1.0), (1.0, 0.0)],
+                         ids=["fwd", "rev"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_mali_pallas_gradient_parity(controller, span, fused):
+    """MALI with the fused Pallas backward vs reference MALI: same recorded
+    step sequence, same closed-form algebra, <= 1e-6 relative."""
+    t0, t1 = span
+    gp = _grad(ALF(eta=0.9, backend="pallas"), MALI(fused_bwd=fused),
+               controller, t0, t1)
+    gr = _grad(ALF(eta=0.9), MALI(fused_bwd=fused), controller, t0, t1)
+    _assert_grads_match(gp, gr)
+
+
+def test_naive_accepts_pallas_and_matches_reference():
+    """Direct backprop through the fused forward launches (custom_vjp
+    rules) == direct backprop through the jnp reference step."""
+    gp = _grad(ALF(eta=0.9, backend="pallas"), Naive(), ConstantSteps(16),
+               0.0, 1.0)
+    gr = _grad(ALF(eta=0.9), Naive(), ConstantSteps(16), 0.0, 1.0)
+    _assert_grads_match(gp, gr)
+
+
+def test_naive_pallas_is_mali_gradient_oracle():
+    """The paper's core identity, now on the pallas backend end-to-end:
+    MALI and Naive run the identical forward, so gradients agree."""
+    gm = _grad(ALF(eta=0.9, backend="pallas"), MALI(), ConstantSteps(32),
+               0.0, 1.0)
+    gn = _grad(ALF(eta=0.9, backend="pallas"), Naive(), ConstantSteps(32),
+               0.0, 1.0)
+    assert _rel(gm, gn) <= 1e-4
+
+
+def test_saveat_steps_accepts_pallas():
+    """SaveAt(steps=True) used to reject backend='pallas' outright; the
+    per-step record is now differentiable through the launches."""
+    def run(backend):
+        def loss(p, z):
+            sol = solve(_f, p, z, 0.0, 1.0, solver=ALF(backend=backend),
+                        controller=ConstantSteps(8), gradient=Naive(),
+                        saveat=SaveAt(steps=True))
+            return jnp.sum(sol.ys ** 2)
+        sol = solve(_f, _params(), _z0(), 0.0, 1.0,
+                    solver=ALF(backend=backend), controller=ConstantSteps(8),
+                    gradient=Naive(), saveat=SaveAt(steps=True))
+        return sol, jax.grad(loss, argnums=(0, 1))(_params(), _z0())
+
+    sol_p, g_p = run("pallas")
+    sol_r, g_r = run("reference")
+    assert int(sol_p.n_live) == int(sol_r.n_live) == 9
+    np.testing.assert_allclose(np.asarray(sol_p.ys), np.asarray(sol_r.ys),
+                               rtol=1e-6, atol=1e-7)
+    _assert_grads_match(g_p, g_r)
+
+
+def test_saveat_dense_accepts_pallas():
+    """SaveAt(dense=True): evaluate(t) works on the pallas backend and its
+    interpolated values are differentiable through the launches."""
+    def loss(p, z, backend):
+        sol = solve(_f, p, z, 0.0, 1.0, solver=ALF(backend=backend),
+                    controller=ConstantSteps(8), gradient=Naive(),
+                    saveat=SaveAt(dense=True))
+        return jnp.sum(sol.evaluate(0.37) ** 2)
+
+    vals, grads = {}, {}
+    for backend in ("pallas", "reference"):
+        vals[backend] = loss(_params(), _z0(), backend)
+        grads[backend] = jax.grad(loss, argnums=(0, 1))(
+            _params(), _z0(), backend)
+    np.testing.assert_allclose(float(vals["pallas"]),
+                               float(vals["reference"]), rtol=1e-6)
+    _assert_grads_match(grads["pallas"], grads["reference"])
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+def test_registry_reflects_new_reverse_contract():
+    from repro.kernels.registry import no_reverse_reason
+    # forward ops carry custom_vjp rules -> NOT allowlisted forward-only
+    assert no_reverse_reason("alf_step.alf_midpoint") is None
+    assert no_reverse_reason("alf_step.alf_update") is None
+    # backward-sweep ops are forward-only by design, with justifications
+    for op in ("alf_step.alf_inverse", "alf_step.alf_inverse_update",
+               "alf_step.alf_bwd_pre", "alf_step.alf_bwd_post"):
+        reason = no_reverse_reason(op)
+        assert reason is not None and len(reason) >= 20, op
+
+
+def test_future_forward_only_step_op_still_rejected():
+    """The rejection machinery is registry-driven now: a solver whose step
+    dispatches ANY allowlisted op is refused by every direct-backprop
+    consumer, with the recorded justification in the error."""
+    from repro.core.naive import check_direct_backprop
+
+    class FrankenALF(ALF):
+        def pallas_step_ops(self):
+            return ("alf_step.alf_bwd_pre",)
+
+    solver = FrankenALF(backend="pallas")
+    with pytest.raises(ValueError, match="NO_REVERSE_RULE"):
+        check_direct_backprop(solver, "Naive()")
+    with pytest.raises(ValueError, match="fused head"):
+        Naive().validate(solver, ConstantSteps(4))
+    # the per-step record path runs its own consumer check (gradient=MALI
+    # passes MALI.validate, so the rejection must come from SaveAt itself)
+    with pytest.raises(ValueError, match="SaveAt\\(steps=True\\)"):
+        solve(_f, _params(), _z0(), 0.0, 1.0, solver=solver,
+              controller=ConstantSteps(4), gradient=MALI(),
+              saveat=SaveAt(steps=True))
+
+
+def test_plain_pallas_alf_passes_direct_backprop_check():
+    from repro.core.naive import check_direct_backprop
+    check_direct_backprop(ALF(backend="pallas"), "Naive()")  # no raise
+    Naive().validate(ALF(backend="pallas"), ConstantSteps(4))
+    assert ALF().pallas_step_ops() == ()
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting: the backward elementwise algebra is ONE launch on each
+# side of the f-eval linearization
+# ---------------------------------------------------------------------------
+
+def test_fused_backward_step_is_two_launches():
+    from repro.core.mali import _pallas_fused_inverse_and_vjp
+    from repro.launch.hlo_cost import count_pallas_launches
+
+    z = jnp.ones((5,), jnp.float32)
+    args = (_params(), z, z, jnp.float32(1.0), jnp.float32(0.1), z, z)
+
+    def bwd_step(params, z_i, v_i, t_i, h, a_z, a_v):
+        return _pallas_fused_inverse_and_vjp(_f, 0.9, params, z_i, v_i,
+                                             t_i, h, a_z, a_v)
+
+    assert count_pallas_launches(bwd_step, *args) == 2
+
+
+def test_forward_step_launch_counts():
+    from repro.core.alf import alf_step_with_error
+    from repro.launch.hlo_cost import count_pallas_launches
+
+    z = jnp.ones((5,), jnp.float32)
+    args = (_params(), z, z, jnp.float32(0.0), jnp.float32(0.1))
+
+    def step(backend):
+        def fn(params, z_, v_, t, h):
+            return alf_step_with_error(_f, params, z_, v_, t, h, 0.9,
+                                       backend)
+        return fn
+
+    assert count_pallas_launches(step("pallas"), *args) == 2
+    assert count_pallas_launches(step("reference"), *args) == 0
+
+
+def test_mali_pallas_grad_total_launches():
+    """End-to-end check that the WHOLE backward elementwise algebra stays
+    fused: one MALI train-step jaxpr on the pallas backend contains exactly
+    4 launches — 2 in the forward scan body (midpoint + update) and 2 in
+    the backward scan body (bwd_pre + bwd_post); the reference backend
+    contains none."""
+    from repro.launch.hlo_cost import count_pallas_launches
+
+    def loss_fn(backend):
+        def loss(p, z):
+            sol = solve(_f, p, z, 0.0, 1.0, solver=ALF(backend=backend),
+                        controller=ConstantSteps(4), gradient=MALI())
+            return jnp.sum(sol.ys)
+        return loss
+
+    n_pallas = count_pallas_launches(jax.grad(loss_fn("pallas"),
+                                              argnums=(0, 1)),
+                                     _params(), _z0())
+    n_ref = count_pallas_launches(jax.grad(loss_fn("reference"),
+                                           argnums=(0, 1)),
+                                  _params(), _z0())
+    assert n_pallas == 4, n_pallas
+    assert n_ref == 0, n_ref
