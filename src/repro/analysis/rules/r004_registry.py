@@ -63,8 +63,24 @@ def _load_registries():
         Backsolve: {"adjoint", "backsolve"},
     }
     batchings = {sub: {sub.__name__} for sub in Batching.__subclasses__()}
+    # Serve-layer policy registries (PR 8): every admission / scheduling /
+    # cache-eviction policy reachable by string must carry the full
+    # interface and show up in tests, same contract as the solver zoo.
+    from repro.serve import (ADMISSION_POLICIES, CACHE_POLICIES,
+                             SCHEDULING_POLICIES, AdmissionPolicy,
+                             CachePolicy, SchedulingPolicy)
+
+    def by_class(reg) -> Dict[type, Set[str]]:
+        out: Dict[type, Set[str]] = {}
+        for key, inst in reg.items():
+            out.setdefault(type(inst), set()).add(key)
+        return out
+
     return [(Solver, solvers), (GradientMethod, methods),
-            (Batching, batchings)]
+            (Batching, batchings),
+            (AdmissionPolicy, by_class(ADMISSION_POLICIES)),
+            (SchedulingPolicy, by_class(SCHEDULING_POLICIES)),
+            (CachePolicy, by_class(CACHE_POLICIES))]
 
 
 def check_registries(tests_dir) -> List[Violation]:

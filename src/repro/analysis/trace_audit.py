@@ -20,6 +20,12 @@ Two instruments, neither of which touches a device:
   any static argument shows up here as a second trace. (This caught
   ``SaveAt``/``Event``'s identity hashing — fixed in interface.py.)
 
+A third sweep (:func:`run_serve_audit`) covers the serving layer's
+chunked re-dispatch entry point: ``chunk_transition`` must be
+spec-preserving (eval_shape golden check) and one trace must serve every
+round (fresh equal-valued solver/config objects — the serve configs carry
+the same value-hash contract as SaveAt).
+
 Emits the dict that ``python -m repro.analysis`` merges into
 ``analysis_report.json``.
 """
@@ -201,6 +207,110 @@ def run_shape_audit():
 
 
 # --------------------------------------------------------------------------
+# Serve audit (PR 8): the chunked re-dispatch entry point
+# --------------------------------------------------------------------------
+
+def _serve_dynamics(params, z, t):
+    # module-level for the same reason as _event_cond: jit hashes the
+    # vector field by identity, and the engine passes one stable object.
+    del params, t
+    return -z
+
+
+def _serve_slot_specs(b: int):
+    """Abstract SlotBatch for ALF state (z, v) at batch width ``b``."""
+    from repro.serve import SlotBatch
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((b, D), F32)
+    row = jax.ShapeDtypeStruct((b,), f32)
+    return SlotBatch(
+        state=(vec, vec), t=row, t1=row, h=row, rtol=row, atol=row,
+        budget=jax.ShapeDtypeStruct((b,), jnp.int32),
+        active=jax.ShapeDtypeStruct((b,), jnp.bool_),
+        reached=jax.ShapeDtypeStruct((b,), jnp.bool_),
+        n_trials=jax.ShapeDtypeStruct((b,), jnp.int32),
+        n_accepted=jax.ShapeDtypeStruct((b,), jnp.int32))
+
+
+def run_serve_audit():
+    """Audit the serve engine's dispatch path without touching a device.
+
+    Shape side: ``chunk_transition`` must be SPEC-PRESERVING — the output
+    SlotBatch has exactly the input's shapes/dtypes, which is what lets
+    the engine re-dispatch the same compiled executable every round
+    without reallocation. Config side: the frozen request/engine config
+    dataclasses must be value-hashed (the PR 6 lesson — identity-hashed
+    statics retrace per fresh instance). Returns
+    (n_combos, [shape failures], {retrace-case: count}).
+    """
+    from repro.core import ALF
+    from repro.serve import EngineConfig, RequestConfig, chunk_transition
+
+    failures: List[str] = []
+    combos = 0
+
+    for b, chunk_steps in ((1, 1), (4, 8), (8, 32)):
+        combos += 1
+        name = f"serve:chunk_transition/b{b}/c{chunk_steps}"
+        slots = _serve_slot_specs(b)
+        try:
+            out = jax.eval_shape(
+                lambda p, s, c=chunk_steps: chunk_transition(
+                    p, s, f=_serve_dynamics, solver=ALF(eta=0.9),
+                    chunk_steps=c), {}, slots)
+        except Exception as e:  # noqa: BLE001 — report, don't abort sweep
+            failures.append(f"{name}: eval_shape raised "
+                            f"{type(e).__name__}: {e}")
+            continue
+        ins = jax.tree_util.tree_leaves_with_path(slots)
+        outs = jax.tree_util.tree_leaves_with_path(out)
+        for (path_i, leaf_i), (path_o, leaf_o) in zip(ins, outs):
+            where = jax.tree_util.keystr(path_i)
+            if path_i != path_o:
+                failures.append(f"{name}: output tree path {path_o} != "
+                                f"input {path_i}")
+            elif (tuple(leaf_o.shape) != tuple(leaf_i.shape)
+                  or leaf_o.dtype != leaf_i.dtype):
+                failures.append(
+                    f"{name}{where}: {leaf_o.shape}/{leaf_o.dtype} != "
+                    f"input spec {leaf_i.shape}/{leaf_i.dtype} — "
+                    "dispatch is no longer shape-preserving")
+
+    # Value-hash contract on the frozen configs that ride as jit statics
+    # (dense-lane solves, cache keys, the dispatcher's solver argument).
+    config_cases = [
+        ("serve:RequestConfig",
+         lambda: RequestConfig(t1=2.0, rtol=1e-4, atol=1e-5,
+                               max_steps=64, dense=True)),
+        ("serve:EngineConfig",
+         lambda: EngineConfig(slots=4, chunk_steps=8, solver=ALF(eta=0.9))),
+    ]
+    for name, fresh in config_cases:
+        combos += 1
+        a, b2 = fresh(), fresh()
+        if a != b2 or hash(a) != hash(b2):
+            failures.append(
+                f"{name}: fresh equal-valued instances compare/hash "
+                "unequal — statics keyed on this retrace every round")
+
+    # Retrace count through a dispatch-shaped jit boundary with a FRESH
+    # equal-valued solver per trace (how the engine builds its config).
+    traces = {"n": 0}
+
+    def body(params, slots, *, solver, chunk_steps):
+        traces["n"] += 1
+        return chunk_transition(params, slots, f=_serve_dynamics,
+                                solver=solver, chunk_steps=chunk_steps)
+
+    jitted = jax.jit(body, static_argnames=("solver", "chunk_steps"))
+    slots = jax.tree_util.tree_map(
+        lambda spec: jnp.zeros(spec.shape, spec.dtype), _serve_slot_specs(4))
+    for _ in range(2):
+        jitted.trace({}, slots, solver=ALF(eta=0.9), chunk_steps=8)
+    return combos, failures, {"serve:dispatch/alf-eta0.9": traces["n"]}
+
+
+# --------------------------------------------------------------------------
 # Retrace audit
 # --------------------------------------------------------------------------
 
@@ -278,6 +388,10 @@ def run_trace_audit() -> dict:
     t0 = time.time()
     combos, failures = run_shape_audit()
     retrace = run_retrace_audit()
+    serve_combos, serve_failures, serve_retrace = run_serve_audit()
+    combos += serve_combos
+    failures += serve_failures
+    retrace.update(serve_retrace)
     retrace_failures = [f"retrace:{name}: traced {n} times (want 1) — a "
                         f"static config object hashes by identity"
                         for name, n in retrace.items() if n != 1]

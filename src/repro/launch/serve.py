@@ -1,4 +1,4 @@
-"""Serving driver: LM prefill/decode AND the batched-ODE solve fleet.
+"""Serving driver: LM prefill/decode AND the continuous-batching ODE loop.
 
 Two serving paths share this driver:
 
@@ -11,20 +11,26 @@ Two serving paths share this driver:
   and tokens/s. The same prefill/decode step functions are what the dry-run
   lowers at the assigned 32k/500k shapes on the production mesh.
 
-* **ODE path** (``--mode ode``) — a fleet of independent Neural-ODE solves
-  served data-parallel, the batched ``solve()`` capping the Batching axis::
+* **ODE path** (``--mode ode``) — the ``repro.serve`` serving loop::
 
       PYTHONPATH=src python -m repro.launch.serve --mode ode --batch 64 \
-          [--ode-batching per_sample|lockstep] [--production-mesh]
+          --requests 256 --rate 100 [--ode-engine continuous|static] \
+          [--chunk-steps 32] [--seed 0] [--d-state 32] [--t1 1.0] \
+          [--rtol 1e-3 --atol 1e-4 --max-steps 512] [--production-mesh]
 
-  Each request is one initial state; the fleet is integrated by
-  ``solve(..., batching=Sharded(axis='data', inner=...))`` — shard_map
-  over the mesh's 'data' axis (production: 16-way, host: all local
-  devices), with per-shard :class:`~repro.core.interface.PerSample`
-  adaptive control by default so one stiff request never re-trials its
-  shard-mates. Prints solves/s, total/ per-request f-evals from
-  ``Solution.stats.per_sample``, and the request-level step spread — the
-  numbers ``benchmarks/batched_throughput.py`` tracks in CI.
+  Requests (each one initial state of a shared MLP vector field, with its
+  own stiffness scale) arrive as a Poisson stream (``--rate``; omit for
+  all-at-once) and are served by a :class:`repro.serve.
+  ContinuousBatchingEngine` — ``--batch`` slots advanced in
+  ``--chunk-steps`` chunked re-dispatch rounds, finished rows backfilled
+  from the queue between rounds. ``--ode-engine static`` runs the
+  no-backfill static-fleet baseline (the pre-PR-8 one-shot fleet) on the
+  same stream for comparison. Prints the :class:`repro.serve.ServeReport`:
+  p50/p99 latency, solves/s, f-evals/request, occupancy —
+  ``benchmarks/serve_load.py`` tracks the same numbers in CI.
+
+Per-mode ``--batch`` defaults live in ``MODE_DEFAULT_BATCH`` (one place),
+and the resolved value is printed in each run's header.
 """
 from __future__ import annotations
 
@@ -37,13 +43,16 @@ import numpy as np
 
 from repro.configs import DEFAULT_ODE, get_config, smoke_config
 from repro.core.ode_block import OdeSettings
-from repro.distributed.sharding import (batch_sharding,
-                                        cache_shardings, param_shardings,
+from repro.distributed.sharding import (cache_shardings, param_shardings,
                                         replicated)
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_lm
 from repro.models.lm import ServeState, init_serve_state
+
+# One place for the per-mode --batch defaults (main() used to hardcode
+# them inline in two spots). For ode, batch == engine slots (fleet width).
+MODE_DEFAULT_BATCH = {"lm": 4, "ode": 64}
 
 
 def serve(arch: str, *, smoke: bool = True, ode: bool = True,
@@ -105,27 +114,9 @@ def serve(arch: str, *, smoke: bool = True, ode: bool = True,
     return toks
 
 
-def serve_ode(*, batch: int = 64, d_state: int = 32, t1: float = 1.0,
-              batching: str = "per_sample", rtol: float = 1e-3,
-              atol: float = 1e-4, max_steps: int = 512,
-              production_mesh: bool = False, seed: int = 0):
-    """Serve a fleet of independent Neural-ODE solves (one per request)
-    data-parallel over the mesh — the batched-solve serving path.
-
-    Each request integrates a shared MLP vector field from its own initial
-    state with its own stiffness scale (requests are heterogeneous, like
-    production traffic), under ``Sharded(axis='data',
-    inner=PerSample()|Lockstep())``. Returns the final states.
-    """
-    from repro.core import (ALF, AdaptiveController, Lockstep, MALI,
-                            PerSample, Sharded, solve)
-
-    mesh = make_production_mesh() if production_mesh else make_host_mesh()
-    inner = PerSample() if batching == "per_sample" else Lockstep()
-    rng = np.random.default_rng(seed)
-
-    # Shared vector field; per-request state {"y", "scale"} — 'scale'
-    # spreads request stiffness over a decade (d scale/dt = 0).
+def mlp_field(rng: np.random.Generator, d_state: int):
+    """The serving vector field: shared two-layer MLP with per-request
+    stiffness in the state (``d scale/dt = 0``). Returns (f, params)."""
     w1 = jnp.asarray(rng.standard_normal((d_state, d_state)) * 0.4,
                      jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((d_state, d_state)) * 0.4,
@@ -137,64 +128,114 @@ def serve_ode(*, batch: int = 64, d_state: int = 32, t1: float = 1.0,
         return {"y": z["scale"] * (h @ p["w2"] - z["y"]),
                 "scale": jnp.zeros_like(z["scale"])}
 
-    z0 = {
-        "y": jnp.asarray(rng.standard_normal((batch, d_state)), jnp.float32),
-        "scale": jnp.asarray(
-            10.0 ** rng.uniform(0.0, 1.0, (batch, 1)), jnp.float32),
-    }
+    return f, params
+
+
+def serve_ode(*, batch: int = 64, d_state: int = 32, t1: float = 1.0,
+              engine: str = "continuous", chunk_steps: int = 32,
+              n_requests: int = 256, rate: float = 0.0, rtol: float = 1e-3,
+              atol: float = 1e-4, max_steps: int = 512,
+              production_mesh: bool = False, seed: int = 0):
+    """Serve a stream of Neural-ODE solve requests through the
+    ``repro.serve`` engine stack.
+
+    ``batch`` engine slots advance in ``chunk_steps``-trial dispatch
+    rounds; ``engine='continuous'`` backfills retired rows from the queue
+    between rounds, ``engine='static'`` runs the no-backfill fleet
+    baseline. ``rate`` > 0 makes arrivals Poisson at that rate (requests/s
+    of serving-clock time); 0 submits everything at t=0 (closed loop).
+    Returns the run's :class:`repro.serve.ServeReport`.
+    """
+    from repro.core import ALF
+    from repro.serve import (ENGINES, EngineConfig, Request, RequestConfig,
+                             format_report, poisson_arrivals)
+
+    if engine not in ENGINES:
+        raise ValueError(f"unknown ode engine {engine!r}; "
+                         f"choose from {sorted(ENGINES)}")
+    mesh = make_production_mesh() if production_mesh else make_host_mesh()
+    rng = np.random.default_rng(seed)
+    f, params = mlp_field(rng, d_state)
+
+    config = RequestConfig(t0=0.0, t1=t1, rtol=rtol, atol=atol,
+                           max_steps=max_steps)
+    if rate > 0.0:
+        arrivals = poisson_arrivals(rng, rate, n_requests)
+    else:
+        arrivals = np.zeros(n_requests)
+    requests = []
+    for i in range(n_requests):
+        z0 = {"y": rng.standard_normal(d_state).astype(np.float32),
+              "scale": np.full((d_state,),
+                               10.0 ** rng.uniform(0.0, 1.0), np.float32)}
+        requests.append(Request(z0=z0, config=config,
+                                arrival=float(arrivals[i])))
+
+    print(f"ode serve: engine={engine} batch(slots)={batch} "
+          f"chunk_steps={chunk_steps} d={d_state} t1={t1} "
+          f"rtol={rtol} atol={atol} max_steps={max_steps} "
+          f"requests={n_requests} "
+          f"rate={rate if rate > 0 else 'all-at-once'} seed={seed}")
 
     with mesh:
-        z0 = jax.device_put(z0, batch_sharding(mesh, "data"))
-        run = jax.jit(lambda z: solve(
-            f, params, z, 0.0, t1, solver=ALF(eta=0.9),
-            controller=AdaptiveController(rtol, atol, max_steps),
-            gradient=MALI(),
-            batching=Sharded(axis="data", inner=inner)))
-        sol = run(z0)                       # compile + warm
-        jax.block_until_ready(sol.ys)
-        t0 = time.time()
-        sol = run(z0)
-        jax.block_until_ready(sol.ys)
-        dt = time.time() - t0
-
-    per = sol.stats.per_sample
-    print(f"ode fleet: batch={batch} d={d_state} "
-          f"mesh=data:{mesh.shape['data']} inner={inner.name}")
-    print(f"solve: {dt * 1e3:.1f} ms ({batch / max(dt, 1e-9):.0f} solves/s)")
-    print(f"f-evals: total={int(sol.stats.n_fevals)} "
-          f"per-request min/median/max = {int(jnp.min(per.n_fevals))}/"
-          f"{int(jnp.median(per.n_fevals))}/{int(jnp.max(per.n_fevals))}")
-    print(f"steps: accepted={int(sol.stats.n_accepted)} "
-          f"rejected={int(sol.stats.n_rejected)}")
-    return sol
+        eng = ENGINES[engine](
+            f, params,
+            config=EngineConfig(slots=batch, chunk_steps=chunk_steps,
+                                solver=ALF(eta=0.9)),
+            vf_id=f"mlp-d{d_state}-seed{seed}")
+        eng.submit(requests)
+        report = eng.run()
+    print(format_report(report))
+    return report
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", default="lm", choices=["lm", "ode"],
-                    help="lm: prefill/decode serving; ode: batched-ODE fleet")
+                    help="lm: prefill/decode serving; ode: continuous-"
+                         "batching ODE serving loop")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=None,
-                    help="requests per step (default: 4 for lm, 64 for ode)")
+                    help="lm: requests per step; ode: engine batch slots "
+                         f"(defaults: {MODE_DEFAULT_BATCH})")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ode", default="on", choices=["on", "off"])
-    ap.add_argument("--ode-batching", default="per_sample",
-                    choices=["per_sample", "lockstep"],
-                    help="inner batching of the sharded ODE fleet")
+    ap.add_argument("--ode-engine", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous: chunked backfill; static: one-shot "
+                         "fleet baseline")
+    ap.add_argument("--chunk-steps", type=int, default=32,
+                    help="adaptive trials per dispatch round (ode)")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="number of ODE requests to serve")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in requests/s "
+                         "(0 = submit all at t=0)")
+    ap.add_argument("--d-state", type=int, default=32,
+                    help="ODE state dimension per request")
+    ap.add_argument("--t1", type=float, default=1.0,
+                    help="integration span end (ode)")
+    ap.add_argument("--rtol", type=float, default=1e-3)
+    ap.add_argument("--atol", type=float, default=1e-4)
+    ap.add_argument("--max-steps", type=int, default=512,
+                    help="per-request adaptive trial budget (ode)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--production-mesh", action="store_true")
     a = ap.parse_args()
+    batch = MODE_DEFAULT_BATCH[a.mode] if a.batch is None else a.batch
     if a.mode == "ode":
-        serve_ode(batch=64 if a.batch is None else a.batch,
-                  batching=a.ode_batching,
-                  production_mesh=a.production_mesh)
+        serve_ode(batch=batch, d_state=a.d_state, t1=a.t1,
+                  engine=a.ode_engine, chunk_steps=a.chunk_steps,
+                  n_requests=a.requests, rate=a.rate, rtol=a.rtol,
+                  atol=a.atol, max_steps=a.max_steps,
+                  production_mesh=a.production_mesh, seed=a.seed)
         return
     serve(a.arch, smoke=a.smoke, ode=a.ode == "on", prompt_len=a.prompt_len,
-          decode_tokens=a.decode_tokens,
-          batch=4 if a.batch is None else a.batch,
-          production_mesh=a.production_mesh)
+          decode_tokens=a.decode_tokens, batch=batch,
+          production_mesh=a.production_mesh, seed=a.seed)
 
 
 if __name__ == "__main__":

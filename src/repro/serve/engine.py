@@ -1,0 +1,539 @@
+"""Continuous-batching ODE engine: chunked re-dispatch over masked slots.
+
+The chunk lane is the tentpole: a fixed fleet of ``slots`` batch rows, each
+carrying one in-flight request's *entire* adaptive-integration state —
+solver state, current time, target time, warm step proposal, tolerances and
+trial budget — through :func:`chunk_transition`, a vmapped masked scan of
+``chunk_steps`` accept/reject trials per dispatch round. The per-row loop
+body is arithmetic-identical to :func:`repro.core.integrate.
+integrate_adaptive` (same accept predicate, same step-size controller, same
+end clipping), so chunking at round boundaries is invisible to the
+numerics: a request's trajectory is bit-equal to the one ``solve()``
+produces in a single unchunked scan, and the parity test holds the engine
+to it. Rows that reach their target (or exhaust their budget) retire
+between rounds and their slots are immediately backfilled from the
+scheduler queue — a stiff straggler keeps exactly one row busy instead of
+holding a whole static batch hostage.
+
+``chunk_transition`` is a module-level function jitted once with
+``(f, solver, chunk_steps)`` static: every round of every engine instance
+with equal config reuses one compiled executable (the trace audit counts
+traces across fresh equal-valued configs), and the transition is
+shape-preserving — slots go in and come out with identical specs, so no
+round ever reallocates.
+
+Two engines share the dispatch machinery:
+
+* :class:`ContinuousBatchingEngine` — retire + backfill every round;
+* :class:`StaticFleetEngine` — the pre-serve baseline: form a batch from
+  the queue, integrate it to completion with NO backfill, complete every
+  member at batch end (this is what ``launch/serve.py --mode ode`` used to
+  do with one ``Sharded(inner=PerSample())`` fleet).
+
+Dense/event requests bypass the slots: each runs a per-request
+``solve(saveat=SaveAt(dense=True))`` / ``solve(event=...)`` whose dense
+interpolant lands in the :class:`repro.serve.cache.InterpolantCache`, so
+repeated ``evaluate(t)`` queries on a hot trajectory cost zero f-evals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.integrate import tree_where
+from repro.core.solve import solve
+from repro.core.interface import SaveAt
+from repro.core.solvers import ALF, Solver
+from repro.core.stepsize import (AdaptiveController, error_ratio,
+                                 initial_step_size, next_step_size)
+
+from .cache import InterpolantCache
+from .metrics import RequestRecord, ServeReport, summarize
+from .scheduler import Request, Scheduler
+
+_tm = jax.tree_util.tree_map
+
+Pytree = Any
+
+
+class SlotBatch(NamedTuple):
+    """The fleet's whole in-flight state, batch axis first on every leaf.
+
+    One row == one request mid-integration; ``active=False`` rows are empty
+    slots that ride through the masked scan as no-ops (their trials update
+    nothing and count nothing). A pytree, so it passes through jit whole.
+    """
+    state: Pytree          # stacked solver state (B, ...)
+    t: jax.Array           # (B,) f32 current time
+    t1: jax.Array          # (B,) f32 target time
+    h: jax.Array           # (B,) f32 signed warm-started step proposal
+    rtol: jax.Array        # (B,) f32 per-request relative tolerance
+    atol: jax.Array        # (B,) f32 per-request absolute tolerance
+    budget: jax.Array      # (B,) int32 per-request trial budget (max_steps)
+    active: jax.Array      # (B,) bool slot occupied
+    reached: jax.Array     # (B,) bool hit t1
+    n_trials: jax.Array    # (B,) int32 trials spent so far
+    n_accepted: jax.Array  # (B,) int32 accepted steps so far
+
+
+class _RowTolerance:
+    """Controller shim closing the shared error norm over ONE row's traced
+    (rtol, atol) pair — how per-request tolerances ride through
+    ``Solver.trial_fn``, whose contract only needs ``error_ratio``. Not a
+    registered StepController: it exists only inside the chunk trace."""
+
+    def __init__(self, rtol: jax.Array, atol: jax.Array):
+        self.rtol = rtol
+        self.atol = atol
+
+    def error_ratio(self, err, z0, z1) -> jax.Array:
+        if err is None:
+            raise ValueError(
+                "the serve engine's per-row adaptive control needs a "
+                "solver with an embedded error estimate")
+        return error_ratio(err, z0, z1, self.rtol, self.atol)
+
+
+def chunk_transition(params: Pytree, slots: SlotBatch, *, f, solver: Solver,
+                     chunk_steps: int) -> SlotBatch:
+    """One dispatch round: advance every row by up to ``chunk_steps``
+    adaptive trials of its own solve. Pure and shape-preserving (the output
+    SlotBatch has exactly the input's specs).
+
+    Per-row semantics match ``integrate_adaptive``'s masked scan body:
+    done rows (empty slot / target reached / budget exhausted) ride along
+    as no-ops, accepted steps warm-start the next proposal through the
+    carry, and the final step clips to land exactly on ``t1``.
+    """
+
+    def row(slot: SlotBatch) -> SlotBatch:
+        trial = solver.trial_fn(f, params,
+                                _RowTolerance(slot.rtol, slot.atol))
+
+        def body(carry, _):
+            state, t, h, reached, n_tr, n_acc = carry
+            done = (~slot.active) | reached | (n_tr >= slot.budget)
+            remaining = slot.t1 - t
+            is_last = jnp.abs(h) >= jnp.abs(remaining)
+            h_eff = jnp.where(is_last, remaining, h)
+            state_next, ratio = trial(state, t, h_eff)
+            accept = (ratio <= 1.0) & (~done)
+            n_tr = n_tr + jnp.where(done, 0, 1).astype(jnp.int32)
+            new_t = jnp.where(accept, jnp.where(is_last, slot.t1, t + h_eff),
+                              t)
+            new_state = tree_where(accept, state_next, state)
+            new_reached = reached | (accept & is_last)
+            h_next = next_step_size(h_eff, ratio, solver.order)
+            h_next = jnp.where(done, h, h_next)
+            n_acc = n_acc + accept.astype(jnp.int32)
+            return (new_state, new_t, h_next, new_reached, n_tr, n_acc), None
+
+        carry0 = (slot.state, slot.t, slot.h, slot.reached, slot.n_trials,
+                  slot.n_accepted)
+        (state, t, h, reached, n_tr, n_acc), _ = lax.scan(
+            body, carry0, None, length=chunk_steps)
+        return slot._replace(state=state, t=t, h=h, reached=reached,
+                             n_trials=n_tr, n_accepted=n_acc)
+
+    return jax.vmap(row)(slots)
+
+
+# Jitted once per (f, solver, chunk_steps, slot specs): the engine passes
+# the SAME static objects every round, so serving never retraces — the
+# trace audit dispatches twice with fresh equal-valued configs and asserts
+# one trace.
+dispatch_chunk = jax.jit(chunk_transition,
+                         static_argnames=("f", "solver", "chunk_steps"))
+
+
+@functools.partial(jax.jit, static_argnames=("f", "solver"))
+def _init_state(params, z0, t0, *, f, solver: Solver):
+    return solver.init_state(f, params, z0, t0)
+
+
+@jax.jit
+def _write_row(slots: SlotBatch, idx, row: SlotBatch) -> SlotBatch:
+    return _tm(lambda buf, r: buf.at[idx].set(r), slots, row)
+
+
+@jax.jit
+def _deactivate(slots: SlotBatch, idx) -> SlotBatch:
+    return slots._replace(active=slots.active.at[idx].set(False))
+
+
+@functools.partial(jax.jit, static_argnames=("f", "solver", "controller"))
+def _dense_solve(params, z0, t0, t1, *, f, solver, controller):
+    return solve(f, params, z0, t0, t1, solver=solver, controller=controller,
+                 saveat=SaveAt(dense=True))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("f", "solver", "controller", "event"))
+def _event_solve(params, z0, t0, t1, *, f, solver, controller, event):
+    return solve(f, params, z0, t0, t1, solver=solver, controller=controller,
+                 event=event)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine configuration (frozen => value-hashed, so equal
+    configs share every jit cache downstream of the dispatcher).
+
+    ``slots`` is the fleet width B (concurrent in-flight requests),
+    ``chunk_steps`` the trials per dispatch round — the backfill
+    granularity: retired rows are only refilled *between* rounds, so small
+    chunks react to arrivals faster at more dispatch overhead (the
+    tradeoff `serve/README.md` documents against mid-scan backfill).
+    """
+    slots: int = 8
+    chunk_steps: int = 32
+    solver: Solver = dataclasses.field(default_factory=lambda: ALF(eta=0.9))
+
+    def __post_init__(self):
+        if not isinstance(self.slots, int) or self.slots < 1:
+            raise ValueError(
+                f"EngineConfig: slots must be a positive integer, got "
+                f"{self.slots!r}")
+        if not isinstance(self.chunk_steps, int) or self.chunk_steps < 1:
+            raise ValueError(
+                f"EngineConfig: chunk_steps must be a positive integer, "
+                f"got {self.chunk_steps!r}")
+        if not isinstance(self.solver, Solver):
+            raise TypeError(
+                f"EngineConfig: solver must be a Solver, got "
+                f"{self.solver!r}")
+        if not self.solver.has_error_estimate:
+            raise ValueError(
+                f"EngineConfig: solver {self.solver.name!r} has no "
+                "embedded error estimate; per-request adaptive control "
+                "needs one (use ALF or an embedded RK pair)")
+
+
+class _EngineBase:
+    """Shared machinery of both engines: slot insert/retire, the dense and
+    event bypass lanes, the serving clock, and report assembly.
+
+    The clock is *virtual*: it advances by the measured wall time of each
+    dispatch (``timer`` defaults to ``time.perf_counter``) and jumps over
+    idle gaps to the next arrival — so a load run never sleeps, latency is
+    ``completion - arrival`` on one consistent axis, and tests inject a
+    deterministic fake timer for wall-time-free assertions.
+    """
+
+    name = "?"
+
+    # Backstop against scheduler/engine bugs, far above any real run.
+    MAX_ROUNDS = 1_000_000
+
+    def __init__(self, f, params, *, config: Optional[EngineConfig] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 cache: Optional[InterpolantCache] = None,
+                 vf_id: str = "vf",
+                 timer: Callable[[], float] = time.perf_counter):
+        self.f = f
+        self.params = params
+        self.config = config if config is not None else EngineConfig()
+        if not isinstance(self.config, EngineConfig):
+            raise TypeError(
+                f"config must be an EngineConfig, got {self.config!r}")
+        self.scheduler = scheduler if scheduler is not None else Scheduler()
+        self.cache = cache if cache is not None else InterpolantCache()
+        self.vf_id = vf_id
+        self.timer = timer
+
+        self.now = 0.0
+        self.rounds = 0
+        self.occupancy: List[float] = []
+        self.records: List[RequestRecord] = []
+        self.results: Dict[int, Pytree] = {}
+        self.event_times: Dict[int, float] = {}
+
+        self.slots: Optional[SlotBatch] = None
+        self.inflight: List[Optional[Request]] = [None] * self.config.slots
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        self.scheduler.schedule(list(requests))
+
+    # -- slot plumbing -----------------------------------------------------
+
+    def _alloc_slots(self, state_template: Pytree) -> SlotBatch:
+        b = self.config.slots
+        f32 = jnp.float32
+        return SlotBatch(
+            state=_tm(lambda leaf: jnp.zeros((b,) + leaf.shape, leaf.dtype),
+                      state_template),
+            t=jnp.zeros((b,), f32), t1=jnp.zeros((b,), f32),
+            h=jnp.zeros((b,), f32),
+            rtol=jnp.ones((b,), f32), atol=jnp.ones((b,), f32),
+            budget=jnp.zeros((b,), jnp.int32),
+            active=jnp.zeros((b,), bool), reached=jnp.zeros((b,), bool),
+            n_trials=jnp.zeros((b,), jnp.int32),
+            n_accepted=jnp.zeros((b,), jnp.int32))
+
+    def _insert(self, idx: int, req: Request) -> None:
+        cfg = req.config
+        z0 = _tm(jnp.asarray, req.z0)
+        state0 = _init_state(self.params, z0, jnp.float32(cfg.t0),
+                             f=self.f, solver=self.config.solver)
+        if self.slots is None:
+            self.slots = self._alloc_slots(state0)
+        template = _tm(lambda buf: buf[0], self.slots.state)
+        t_def = jax.tree_util.tree_structure(template)
+        r_def = jax.tree_util.tree_structure(state0)
+        t_shapes = [leaf.shape for leaf in jax.tree_util.tree_leaves(template)]
+        r_shapes = [leaf.shape for leaf in jax.tree_util.tree_leaves(state0)]
+        if t_def != r_def or t_shapes != r_shapes:
+            raise ValueError(
+                f"request {req.rid}: z0 state structure/shapes do not "
+                f"match this engine's fleet (engine: {t_def}/{t_shapes}, "
+                f"request: {r_def}/{r_shapes}); one engine serves one "
+                "vector field at one state shape — run another engine for "
+                "other shapes")
+        f32 = jnp.float32
+        row = SlotBatch(
+            state=state0,
+            t=f32(cfg.t0), t1=f32(cfg.t1),
+            h=jnp.asarray(initial_step_size(cfg.rtol, cfg.atol,
+                                            f32(cfg.span)), f32),
+            rtol=f32(cfg.rtol), atol=f32(cfg.atol),
+            budget=jnp.int32(cfg.max_steps),
+            active=jnp.asarray(True), reached=jnp.asarray(False),
+            n_trials=jnp.int32(0), n_accepted=jnp.int32(0))
+        self.slots = _write_row(self.slots, jnp.int32(idx), row)
+        self.inflight[idx] = req
+
+    def _n_active(self) -> int:
+        if self.slots is None:
+            return 0
+        return int(np.sum(np.asarray(self.slots.active)))
+
+    def _init_fevals(self) -> int:
+        # Matches solve()'s accounting: ALF spends one dynamics evaluation
+        # on v0 = f(z0, t0) at state init.
+        return 1 if isinstance(self.config.solver, ALF) else 0
+
+    def _retire_row(self, idx: int, completion: float) -> None:
+        """Record + free one finished row (reached t1 or budget out)."""
+        req = self.inflight[idx]
+        assert req is not None
+        reached = bool(np.asarray(self.slots.reached[idx]))
+        n_tr = int(np.asarray(self.slots.n_trials[idx]))
+        n_acc = int(np.asarray(self.slots.n_accepted[idx]))
+        state_row = _tm(lambda buf: np.asarray(buf[idx]), self.slots.state)
+        self.results[req.rid] = self.config.solver.output(state_row)
+        self.records.append(RequestRecord(
+            rid=req.rid, arrival=req.arrival, completion=completion,
+            n_fevals=n_tr * self.config.solver.stages + self._init_fevals(),
+            n_accepted=n_acc, completed=reached, lane="batch"))
+        self.slots = _deactivate(self.slots, jnp.int32(idx))
+        self.inflight[idx] = None
+
+    def _finished_rows(self) -> List[int]:
+        active = np.asarray(self.slots.active)
+        reached = np.asarray(self.slots.reached)
+        exhausted = (np.asarray(self.slots.n_trials)
+                     >= np.asarray(self.slots.budget))
+        return [int(i) for i in
+                np.nonzero(active & (reached | exhausted))[0]]
+
+    def _dispatch(self) -> None:
+        """One measured chunk round: advance the fleet, advance the clock."""
+        self.occupancy.append(self._n_active() / self.config.slots)
+        t_start = self.timer()
+        self.slots = dispatch_chunk(self.params, self.slots, f=self.f,
+                                    solver=self.config.solver,
+                                    chunk_steps=self.config.chunk_steps)
+        jax.block_until_ready(self.slots)
+        self.now += max(self.timer() - t_start, 0.0)
+        self.rounds += 1
+        if self.rounds > self.MAX_ROUNDS:
+            raise RuntimeError(
+                f"serve engine exceeded {self.MAX_ROUNDS} dispatch rounds "
+                "— a request is neither finishing nor exhausting its "
+                "budget (file a bug with the request mix)")
+
+    # -- dense / event bypass lane ----------------------------------------
+
+    def _serve_bypass(self) -> None:
+        """Serve every queued dense/event request immediately (they run as
+        per-request solves and never occupy a batch slot)."""
+        while True:
+            reqs = self.scheduler.take(1, pred=lambda r: r.wants_dense
+                                       or r.event is not None)
+            if not reqs:
+                return
+            req = reqs[0]
+            if req.event is not None:
+                self._serve_event(req)
+            else:
+                self._serve_dense(req)
+
+    def _controller(self, cfg) -> AdaptiveController:
+        return AdaptiveController(cfg.rtol, cfg.atol, cfg.max_steps)
+
+    def _serve_dense(self, req: Request) -> None:
+        cfg = req.config
+        key = self.cache.key(self.vf_id, cfg, req.z0)
+        t_start = self.timer()
+        sol = self.cache.get(key)
+        hit = sol is not None
+        if not hit:
+            sol = _dense_solve(self.params, _tm(jnp.asarray, req.z0),
+                               jnp.float32(cfg.t0), jnp.float32(cfg.t1),
+                               f=self.f, solver=self.config.solver,
+                               controller=self._controller(cfg))
+            jax.block_until_ready(sol.ys)
+            self.cache.put(key, sol)
+        if req.eval_ts is not None:
+            out = sol.evaluate(jnp.asarray(req.eval_ts, jnp.float32))
+        else:
+            out = sol.ys
+        out = _tm(np.asarray, out)
+        self.now += max(self.timer() - t_start, 0.0)
+        self.results[req.rid] = out
+        # The whole point of the interpolant cache: a hit re-reads the
+        # recorded cubic-Hermite coefficients — zero incremental f-evals.
+        fevals = 0 if hit else int(sol.stats.n_fevals)
+        completed = True if hit else bool(np.asarray(
+            sol.stats.span_complete))
+        self.records.append(RequestRecord(
+            rid=req.rid, arrival=req.arrival, completion=self.now,
+            n_fevals=fevals,
+            n_accepted=0 if hit else int(sol.stats.n_accepted),
+            completed=completed,
+            lane="eval" if req.eval_ts is not None else "dense",
+            cache_hit=hit))
+
+    def _serve_event(self, req: Request) -> None:
+        cfg = req.config
+        t_start = self.timer()
+        sol = _event_solve(self.params, _tm(jnp.asarray, req.z0),
+                           jnp.float32(cfg.t0), jnp.float32(cfg.t1),
+                           f=self.f, solver=self.config.solver,
+                           controller=self._controller(cfg),
+                           event=req.event)
+        jax.block_until_ready(sol.ys)
+        self.now += max(self.timer() - t_start, 0.0)
+        self.results[req.rid] = _tm(np.asarray, sol.ys)
+        self.event_times[req.rid] = float(np.asarray(sol.stats.event_time))
+        self.records.append(RequestRecord(
+            rid=req.rid, arrival=req.arrival, completion=self.now,
+            n_fevals=int(sol.stats.n_fevals),
+            n_accepted=int(sol.stats.n_accepted),
+            completed=True, lane="event"))
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self) -> ServeReport:
+        return summarize(self.name, self.records, duration=self.now,
+                         occupancy=self.occupancy, rounds=self.rounds,
+                         cache=self.cache,
+                         n_rejected=self.scheduler.n_rejected)
+
+    def run(self) -> ServeReport:
+        raise NotImplementedError
+
+
+class ContinuousBatchingEngine(_EngineBase):
+    """vLLM-style continuous batching: every dispatch round retires the
+    rows that finished and backfills their slots from the queue, so fleet
+    occupancy tracks offered load and a straggler costs one slot, not B."""
+
+    name = "continuous"
+
+    def _backfill(self) -> None:
+        if self.slots is None:
+            free = list(range(self.config.slots))
+        else:
+            free = [int(i) for i in
+                    np.nonzero(~np.asarray(self.slots.active))[0]]
+        if not free:
+            return
+        reqs = self.scheduler.take(
+            len(free),
+            pred=lambda r: not r.wants_dense and r.event is None)
+        for idx, req in zip(free, reqs):
+            self._insert(idx, req)
+
+    def run(self) -> ServeReport:
+        """Drain the scheduler: serve until no request is pending, waiting
+        or in flight. Returns the run's :class:`ServeReport`."""
+        while True:
+            self.scheduler.release(self.now)
+            self._serve_bypass()
+            self._backfill()
+            if self._n_active() == 0:
+                if self.scheduler.drained:
+                    return self.report()
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None:
+                    # Idle: jump the virtual clock to the next arrival.
+                    self.now = max(self.now, nxt)
+                continue
+            self._dispatch()
+            for idx in self._finished_rows():
+                self._retire_row(idx, self.now)
+
+
+class StaticFleetEngine(_EngineBase):
+    """The baseline the tentpole is measured against: form one batch from
+    the queue, integrate the whole batch to completion with no backfill,
+    and hand every member its result when the *batch* finishes — exactly
+    the one-shot ``Sharded(inner=PerSample())`` fleet semantics the old
+    ``launch/serve.py --mode ode`` had. Quick requests wait on the batch's
+    stiffest straggler; arrivals during a batch wait for the next one."""
+
+    name = "static"
+
+    def _reset_slots(self) -> None:
+        if self.slots is not None:
+            self.slots = _tm(jnp.zeros_like, self.slots)
+        self.inflight = [None] * self.config.slots
+
+    def run(self) -> ServeReport:
+        while True:
+            self.scheduler.release(self.now)
+            self._serve_bypass()
+            if self.scheduler.depth == 0:
+                if self.scheduler.drained:
+                    return self.report()
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None:
+                    self.now = max(self.now, nxt)
+                continue
+            reqs = self.scheduler.take(
+                self.config.slots,
+                pred=lambda r: not r.wants_dense and r.event is None)
+            if not reqs:
+                continue
+            self._reset_slots()
+            for idx, req in enumerate(reqs):
+                self._insert(idx, req)
+            # No backfill: the batch runs until every member is done.
+            while True:
+                unfinished = [i for i, r in enumerate(self.inflight)
+                              if r is not None] if self.slots is None else [
+                    i for i in range(self.config.slots)
+                    if self.inflight[i] is not None
+                    and i not in self._finished_rows()]
+                if not unfinished:
+                    break
+                self._dispatch()
+            # Everyone completes together, at batch end.
+            for idx in self._finished_rows():
+                self._retire_row(idx, self.now)
+
+
+ENGINES = {
+    "continuous": ContinuousBatchingEngine,
+    "static": StaticFleetEngine,
+}
