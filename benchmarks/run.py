@@ -22,7 +22,8 @@ from .common import print_rows
 
 BENCHES = ("toy_gradient_error", "memory_cost", "solver_invariance",
            "speed", "damped", "adversarial", "observation_grid",
-           "batched_throughput", "event_dense", "serve_load")
+           "batched_throughput", "event_dense", "serve_load",
+           "train_memory")
 
 
 def _dryrun_summary_rows():

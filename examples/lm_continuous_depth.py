@@ -1,6 +1,6 @@
 """End-to-end driver: train a continuous-depth LM with MALI through the
-full production path (config -> sharded step -> checkpoint -> resume), then
-serve from the trained weights.
+repro.train subsystem (config -> Trainer -> checkpoint -> fault recovery),
+then serve from the trained weights.
 
     PYTHONPATH=src python examples/lm_continuous_depth.py [--steps 120]
 
@@ -8,12 +8,14 @@ This is the paper's §4.2 protocol transplanted to the LM substrate: the
 SAME per-block dynamics f is trained (a) discrete (y = x + f(x), the
 "ResNet") and (b) continuous (y = x + int f dt, MALI) — losses should land
 in the same regime at equal parameter count; (b) runs at O(1) activation
-memory in ODE steps.
+memory in ODE steps. The third phase kills the run mid-step and lets the
+Trainer recover from its checkpoint: the resumed loss trace matches the
+uninterrupted one step-for-step (resumable MALI state).
 """
 import argparse
 import tempfile
 
-from repro.launch.train import TrainConfig, train
+from repro.train import Trainer, TrainerConfig
 
 
 def main():
@@ -21,29 +23,39 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--steps", type=int, default=120)
     args = ap.parse_args()
+    every = max(args.steps // 3, 1)
 
     with tempfile.TemporaryDirectory() as d:
         print("=== continuous-depth (MALI, 2 ODE steps/block) ===")
-        tc = TrainConfig(arch=args.arch, smoke=True, ode=True, ode_steps=2,
-                         steps=args.steps, global_batch=8, seq_len=64,
-                         ckpt_dir=d + "/node", ckpt_every=max(args.steps // 3, 1))
-        final = train(tc)
-        assert final == args.steps
+        cfg = TrainerConfig(arch=args.arch, smoke=True, ode=True, ode_steps=2,
+                            steps=args.steps, global_batch=8, seq_len=64,
+                            ckpt_dir=d + "/node", ckpt_every=every)
+        clean = Trainer(cfg)
+        assert clean.train() == args.steps
 
         print("=== discrete baseline (same params, ode off) ===")
-        tc2 = TrainConfig(arch=args.arch, smoke=True, ode=False,
-                          steps=args.steps, global_batch=8, seq_len=64,
-                          ckpt_dir=d + "/discrete",
-                          ckpt_every=max(args.steps // 3, 1))
-        train(tc2)
+        Trainer(TrainerConfig(arch=args.arch, smoke=True, ode=False,
+                              steps=args.steps, global_batch=8, seq_len=64,
+                              ckpt_dir=d + "/discrete",
+                              ckpt_every=every)).train()
 
-        print("=== resume-from-checkpoint path (fault-tolerance) ===")
-        tc3 = TrainConfig(arch=args.arch, smoke=True, ode=True, ode_steps=2,
-                          steps=args.steps + 20, global_batch=8, seq_len=64,
-                          ckpt_dir=d + "/node",
-                          ckpt_every=max(args.steps // 3, 1))
-        # restore_latest finds the step-`steps` checkpoint and continues
-        train(tc3)
+        print("=== fault-injected recovery (kill mid-run, resume) ===")
+        crash_at = {"step": args.steps // 2, "armed": True}
+
+        def hook(step):
+            if crash_at["armed"] and step == crash_at["step"]:
+                crash_at["armed"] = False
+                raise RuntimeError("injected node failure")
+
+        faulted = Trainer(
+            TrainerConfig(arch=args.arch, smoke=True, ode=True, ode_steps=2,
+                          steps=args.steps, global_batch=8, seq_len=64,
+                          ckpt_dir=d + "/faulted", ckpt_every=every),
+            step_hook=hook)
+        assert faulted.train() == args.steps
+        assert faulted.loss_trace() == clean.loss_trace(), \
+            "recovered run must reproduce the uninterrupted loss trace"
+        print("loss-trace continuity after recovery: OK")
 
     print("=== serve from a continuous-depth model ===")
     from repro.launch.serve import serve

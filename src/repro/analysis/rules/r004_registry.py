@@ -76,11 +76,20 @@ def _load_registries():
             out.setdefault(type(inst), set()).add(key)
         return out
 
+    # Train-layer registries (PR 9): loop drivers and telemetry sinks are
+    # string-reachable through TrainerConfig, so they carry the same
+    # completeness contract.
+    from repro.train import EMITTERS, TRAIN_LOOPS, MetricsEmitter, TrainLoop
+
+    emitters = {cls: {key} for key, cls in EMITTERS.items()}
+
     return [(Solver, solvers), (GradientMethod, methods),
             (Batching, batchings),
             (AdmissionPolicy, by_class(ADMISSION_POLICIES)),
             (SchedulingPolicy, by_class(SCHEDULING_POLICIES)),
-            (CachePolicy, by_class(CACHE_POLICIES))]
+            (CachePolicy, by_class(CACHE_POLICIES)),
+            (TrainLoop, by_class(TRAIN_LOOPS)),
+            (MetricsEmitter, emitters)]
 
 
 def check_registries(tests_dir) -> List[Violation]:

@@ -26,6 +26,12 @@ spec-preserving (eval_shape golden check) and one trace must serve every
 round (fresh equal-valued solver/config objects — the serve configs carry
 the same value-hash contract as SaveAt).
 
+A fourth sweep (:func:`run_train_audit`, PR 9) covers the training
+subsystem: ``train_step`` must be spec-preserving on (params, opt_state)
+so checkpoint restore templates match the live state, the frozen configs
+that ride as jit statics must value-hash, and one trace must serve a run
+rebuilt from fresh equal-valued configs (the checkpoint-resume path).
+
 Emits the dict that ``python -m repro.analysis`` merges into
 ``analysis_report.json``.
 """
@@ -311,6 +317,110 @@ def run_serve_audit():
 
 
 # --------------------------------------------------------------------------
+# Train audit (PR 9): the training subsystem's jit boundary
+# --------------------------------------------------------------------------
+
+def run_train_audit():
+    """Audit the train step without touching a device.
+
+    Shape side: ``repro.train.loop.train_step`` must be SPEC-PRESERVING on
+    (params, opt_state) — the output leaves carry exactly the input's tree
+    paths/shapes/dtypes. That property is what makes (a) the jitted step
+    re-dispatchable without reallocation and (b) the checkpoint restore
+    template (``state_tree``) structurally identical to the live state.
+    Config side: the frozen configs that ride as jit statics
+    (ModelConfig / OptimizerConfig / TrainerConfig) must hash by VALUE, so
+    a run rebuilt from a checkpoint manifest (fresh, equal-valued
+    instances) reuses the original trace. Returns
+    (n_combos, [failures], {retrace-case: count}).
+    """
+    from repro.configs import smoke_config
+    from repro.core.ode_block import OdeSettings
+    from repro.launch.specs import param_specs
+    from repro.optim.optimizer import OptimizerConfig, init_opt_state
+    from repro.train import TrainerConfig
+    from repro.train.loop import train_step
+
+    failures: List[str] = []
+    combos = 0
+    bt, st = 2, 8
+
+    def fresh_cfg():
+        return smoke_config("qwen3-1.7b",
+                            OdeSettings(mode="per_block", method="mali",
+                                        solver="alf", n_steps=2))
+
+    def fresh_opt():
+        return OptimizerConfig(total_steps=10, warmup_steps=2)
+
+    cfg, opt_cfg = fresh_cfg(), fresh_opt()
+    p_spec = param_specs(cfg)
+    o_spec = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), p_spec)
+    b_spec = {"tokens": jax.ShapeDtypeStruct((bt, st), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((bt, st), jnp.int32)}
+
+    combos += 1
+    name = "train:step/mali-smoke"
+    try:
+        p2, o2, _, metrics = jax.eval_shape(
+            lambda p, o, b: train_step(p, o, None, b, cfg=cfg,
+                                       opt_cfg=opt_cfg), p_spec, o_spec,
+            b_spec)
+    except Exception as e:  # noqa: BLE001 — report, don't abort sweep
+        failures.append(f"{name}: eval_shape raised {type(e).__name__}: {e}")
+    else:
+        for tag, got, want in (("params", p2, p_spec), ("opt", o2, o_spec)):
+            ins = jax.tree_util.tree_leaves_with_path(want)
+            outs = jax.tree_util.tree_leaves_with_path(got)
+            for (path_i, leaf_i), (path_o, leaf_o) in zip(ins, outs):
+                where = jax.tree_util.keystr(path_i)
+                if path_i != path_o:
+                    failures.append(f"{name}.{tag}: output tree path "
+                                    f"{path_o} != input {path_i}")
+                elif (tuple(leaf_o.shape) != tuple(leaf_i.shape)
+                      or leaf_o.dtype != leaf_i.dtype):
+                    failures.append(
+                        f"{name}.{tag}{where}: {leaf_o.shape}/{leaf_o.dtype}"
+                        f" != input spec {leaf_i.shape}/{leaf_i.dtype} — "
+                        "the step is no longer spec-preserving")
+        for key in ("loss", "lr", "grad_norm", "ode_accepted",
+                    "ode_rejected", "ode_fevals"):
+            if key not in metrics:
+                failures.append(f"{name}: metrics lacks {key!r}")
+        for key in ("ode_accepted", "ode_rejected", "ode_fevals"):
+            if key in metrics and metrics[key].dtype != jnp.int32:
+                failures.append(f"{name}: metrics[{key!r}] dtype "
+                                f"{metrics[key].dtype} != int32")
+
+    # Value-hash contract on the frozen configs that ride as jit statics.
+    for cname, fresh in (("train:ModelConfig", fresh_cfg),
+                         ("train:OptimizerConfig", fresh_opt),
+                         ("train:TrainerConfig",
+                          lambda: TrainerConfig(steps=10))):
+        combos += 1
+        a, b2 = fresh(), fresh()
+        if a != b2 or hash(a) != hash(b2):
+            failures.append(
+                f"{cname}: fresh equal-valued instances compare/hash "
+                "unequal — statics keyed on this retrace every step")
+
+    # Retrace count with FRESH equal-valued configs per trace (how a
+    # checkpoint-restored run rebuilds its statics).
+    traces = {"n": 0}
+
+    def body(p, o, b, *, cfg, opt_cfg):
+        traces["n"] += 1
+        return train_step(p, o, None, b, cfg=cfg, opt_cfg=opt_cfg)
+
+    jitted = jax.jit(body, static_argnames=("cfg", "opt_cfg"))
+    zeros = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), (p_spec, o_spec, b_spec))
+    for _ in range(2):
+        jitted.trace(*zeros, cfg=fresh_cfg(), opt_cfg=fresh_opt())
+    return combos, failures, {"train:step/mali-smoke": traces["n"]}
+
+
+# --------------------------------------------------------------------------
 # Retrace audit
 # --------------------------------------------------------------------------
 
@@ -392,6 +502,10 @@ def run_trace_audit() -> dict:
     combos += serve_combos
     failures += serve_failures
     retrace.update(serve_retrace)
+    train_combos, train_failures, train_retrace = run_train_audit()
+    combos += train_combos
+    failures += train_failures
+    retrace.update(train_retrace)
     retrace_failures = [f"retrace:{name}: traced {n} times (want 1) — a "
                         f"static config object hashes by identity"
                         for name, n in retrace.items() if n != 1]

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from .aca import ACA
 from .adjoint import Backsolve
 from .alf import check_eta
-from .interface import SaveAt
+from .interface import Batching, SaveAt, Sharded
 from .mali import MALI
 from .naive import Naive
 from .solve import solve
@@ -56,6 +56,9 @@ class OdeSettings:
     fused_bwd: bool = True     # share psi^-1's f-eval with the local VJP
     obs_times: Optional[Tuple[float, ...]] = None  # observation grid ts
                                # (>= 2 points); None -> end state only
+    backend: str = "reference"  # ALF step backend: 'reference' | 'pallas'
+    batch_axis: Optional[str] = None  # mesh axis for Sharded() batching of
+                               # the block's solves; None -> lockstep
 
     def validate(self) -> "OdeSettings":
         if self.mode not in ("off", "per_block"):
@@ -90,13 +93,23 @@ class OdeSettings:
             check_eta(self.eta)
         if self.obs_times is not None and len(self.obs_times) < 2:
             raise ValueError("obs_times needs at least 2 timepoints")
+        if self.backend not in ("reference", "pallas"):
+            raise ValueError(f"bad ode.backend {self.backend!r}; "
+                             "choose 'reference' or 'pallas'")
+        if self.backend == "pallas" and self.solver != "alf":
+            raise ValueError("ode.backend='pallas' requires the ALF solver "
+                             "(the fused step kernels are ALF-specific)")
+        if self.batch_axis is not None and self.obs_times is not None:
+            raise ValueError("ode.batch_axis with obs_times is unsupported: "
+                             "batched trajectories are (B, T, ...) while the "
+                             "block contract is time-leading (T, ...)")
         return self
 
     def as_objects(self):
         """Lower to (solver, controller, gradient, saveat) for solve()."""
         self.validate()
-        solver = (ALF(eta=self.eta) if self.solver == "alf"
-                  else get_solver(self.solver))
+        solver = (ALF(eta=self.eta, backend=self.backend)
+                  if self.solver == "alf" else get_solver(self.solver))
         controller = (ConstantSteps(self.n_steps) if self.n_steps > 0 else
                       AdaptiveController(self.rtol, self.atol,
                                          self.max_steps))
@@ -106,6 +119,17 @@ class OdeSettings:
         saveat = (SaveAt() if self.obs_times is None else
                   SaveAt(ts=jnp.asarray(self.obs_times, jnp.float32)))
         return solver, controller, gradient, saveat
+
+    def batching(self) -> Optional[Batching]:
+        """The Batching object for this block's solves (None = lockstep).
+
+        ``batch_axis`` names a mesh axis: the block's solve runs as a
+        ``Sharded(axis)`` fleet over the ambient ``with mesh:`` context
+        (data-parallel shard_map; see distributed/sharding.ambient_mesh).
+        """
+        if self.batch_axis is None:
+            return None
+        return Sharded(axis=self.batch_axis)
 
 
 def ode_block(dynamics: Callable[[Pytree, Pytree, Any], Pytree],

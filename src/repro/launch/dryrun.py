@@ -147,7 +147,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
                                    grad_shardings=p_sh)
             rep = replicated(mesh)
-            metrics_sh = {"lr": rep, "grad_norm": rep, "loss": rep}
+            metrics_sh = {"lr": rep, "grad_norm": rep, "loss": rep,
+                          "ode_accepted": rep, "ode_rejected": rep,
+                          "ode_fevals": rep}
             jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                              out_shardings=(p_sh, o_sh, metrics_sh),
                              donate_argnums=(0, 1))

@@ -1,44 +1,33 @@
-"""Production training driver.
+"""Training CLI — a thin front-end over :class:`repro.train.Trainer`.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
         --steps 50 --ckpt-dir /tmp/run1
 
-Wires together the full substrate: config -> mesh -> sharded params/opt ->
-synthetic data stream -> jitted train step (microbatching / ZeRO-1 grad
-shardings / optional int8-EF compression) -> async checkpointing ->
-restart-on-failure (fault_tolerance.run_with_recovery). On this CPU
-container use ``--smoke`` (reduced config, 1-device mesh); on a real slice
-the same code path runs the full config on ``make_production_mesh()``.
+The subsystem behind the flags lives in :mod:`repro.train`: native
+``solve()``-based continuous-depth steps, registered TrainLoop drivers,
+resumable (config-fingerprinted) checkpoints, fault recovery and
+structured telemetry. Killing a run and re-launching with the same flags
+resumes from the latest checkpoint and reproduces the uninterrupted loss
+trace; re-launching with different integrator flags fails fast with
+ConfigMismatchError instead of corrupting the run.
+
+``TrainConfig``/``train`` are kept as thin compatibility delegators for
+older callers (same field names, same return).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import logging
-import time
-from typing import Optional
 
-import jax
-import numpy as np
-
-from repro.checkpoint.checkpoint import AsyncCheckpointer, restore_latest
-from repro.configs import get_config, smoke_config
-from repro.core.ode_block import OdeSettings
-from repro.data.synthetic import DataConfig, make_batch
-from repro.distributed.fault_tolerance import run_with_recovery
-from repro.distributed.sharding import (batch_shardings, opt_state_shardings,
-                                        param_shardings, replicated)
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import make_train_step
-from repro.models import init_lm
-from repro.optim.compression import init_ef_state
-from repro.optim.optimizer import (OptimizerConfig, OptState, init_opt_state)
+from repro.train import Trainer, TrainerConfig
 
 log = logging.getLogger("repro.train")
 
 
 @dataclasses.dataclass
 class TrainConfig:
+    """Legacy flat config; ``train(tc)`` maps it onto TrainerConfig."""
     arch: str = "qwen3-1.7b"
     smoke: bool = True
     ode: bool = True
@@ -53,105 +42,27 @@ class TrainConfig:
     keep: int = 3
     seed: int = 0
     log_every: int = 10
-    production_mesh: bool = False   # needs a real multi-chip slice
+    production_mesh: bool = False
     multi_pod: bool = False
 
 
-def build(tc: TrainConfig):
-    ode = (OdeSettings(mode="per_block", method="mali", solver="alf",
-                       n_steps=tc.ode_steps)
-           if tc.ode else OdeSettings(mode="off"))
-    cfg = (smoke_config(tc.arch, ode) if tc.smoke
-           else get_config(tc.arch, ode))
-    mesh = (make_production_mesh(multi_pod=tc.multi_pod)
-            if tc.production_mesh else make_host_mesh())
-    opt_cfg = OptimizerConfig(total_steps=tc.steps,
-                              warmup_steps=max(tc.steps // 20, 1))
-    return cfg, mesh, opt_cfg
+def _to_trainer_config(tc: TrainConfig) -> TrainerConfig:
+    return TrainerConfig(
+        arch=tc.arch, smoke=tc.smoke, ode=tc.ode, ode_steps=tc.ode_steps,
+        steps=tc.steps, global_batch=tc.global_batch, seq_len=tc.seq_len,
+        microbatches=tc.microbatches,
+        loop="compressed" if tc.compress else "standard",
+        ckpt_dir=tc.ckpt_dir, ckpt_every=tc.ckpt_every, keep=tc.keep,
+        seed=tc.seed, log_every=tc.log_every,
+        production_mesh=tc.production_mesh, multi_pod=tc.multi_pod)
 
 
 def train(tc: TrainConfig) -> int:
-    cfg, mesh, opt_cfg = build(tc)
-    dcfg = DataConfig(seed=tc.seed, global_batch=tc.global_batch,
-                      seq_len=tc.seq_len)
-    ckpt = AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep) if tc.ckpt_dir else None
-
-    with mesh:
-        key = jax.random.PRNGKey(tc.seed)
-        params = init_lm(key, cfg)
-        opt_state = init_opt_state(opt_cfg, params)
-        ef = init_ef_state(params) if tc.compress else None
-
-        p_sh = param_shardings(cfg, mesh, params)
-        o_sh = OptState(replicated(mesh),
-                        *(opt_state_shardings(cfg, mesh, p_sh, params),) * 3)
-        params = jax.device_put(params, p_sh)
-        opt_state = jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, s), opt_state,
-            OptState(o_sh.step, o_sh.m, o_sh.v, o_sh.master))
-
-        step_fn = jax.jit(make_train_step(
-            cfg, opt_cfg, microbatches=tc.microbatches,
-            compress=tc.compress, grad_shardings=p_sh))
-
-        def train_loop(resume: Optional[int]) -> int:
-            nonlocal params, opt_state, ef
-            start = 0
-            if resume is not None and ckpt is not None:
-                got = restore_latest(tc.ckpt_dir, {"params": params,
-                                                   "opt": opt_state})
-                if got is not None:
-                    start, tree, _meta = got
-                    params = jax.device_put(tree["params"], p_sh)
-                    opt_state = tree["opt"]
-                    log.info("resumed from step %d", start)
-            b_sh = None
-            t0 = time.time()
-            for step in range(start, tc.steps):
-                batch = make_batch(cfg, dcfg, step)
-                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-                if b_sh is None:
-                    b_sh = batch_shardings(cfg, mesh, batch)
-                batch = {k: jax.device_put(v, b_sh[k])
-                         for k, v in batch.items()}
-                if tc.compress:
-                    params, opt_state, ef, metrics = step_fn(
-                        params, opt_state, ef, batch)
-                else:
-                    params, opt_state, metrics = step_fn(
-                        params, opt_state, batch)
-                if step % tc.log_every == 0 or step == tc.steps - 1:
-                    loss = float(metrics["loss"])
-                    if not np.isfinite(loss):
-                        raise RuntimeError(f"non-finite loss at step {step}")
-                    dt = time.time() - t0
-                    log.info("step %d loss %.4f lr %.2e gnorm %.2f (%.2fs)",
-                             step, loss, float(metrics["lr"]),
-                             float(metrics["grad_norm"]), dt)
-                    print(f"step={step} loss={loss:.4f}", flush=True)
-                if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
-                    ckpt.save(step + 1, {"params": params, "opt": opt_state},
-                              metadata={"loss": float(metrics["loss"])})
-            return tc.steps
-
-        def restore_step() -> Optional[int]:
-            if ckpt is None:
-                return None
-            got = restore_latest(tc.ckpt_dir, {"params": params,
-                                               "opt": opt_state})
-            return got[0] if got else None
-
-        final, stats = run_with_recovery(train_loop, restore_step,
-                                         max_failures=3)
-        if ckpt is not None:
-            ckpt.save(final, {"params": params, "opt": opt_state},
-                      metadata={"final": True})
-            ckpt.close()
-        log.info("done: step %d (failures=%d)", final, stats.failures)
-        return final
+    """Legacy entry point: run a TrainConfig to completion."""
+    return Trainer(_to_trainer_config(tc)).train()
 
 
-def main() -> None:
+def main(argv=None) -> None:
     logging.basicConfig(level=logging.INFO)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -161,23 +72,42 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ode", default="on", choices=["on", "off"])
     ap.add_argument("--ode-steps", type=int, default=2)
+    ap.add_argument("--ode-method", default="mali",
+                    choices=["mali", "naive", "aca", "adjoint"])
+    ap.add_argument("--ode-backend", default="auto",
+                    choices=["auto", "reference", "pallas"])
+    ap.add_argument("--ode-batch-axis", default="",
+                    help="mesh axis for Sharded() solve batching ('' = off)")
+    ap.add_argument("--loop", default="", help="TRAIN_LOOPS key "
+                    "(default: standard, or compressed with --compress)")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="write per-step StepRecord rows to this JSONL file")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false",
                     help="full assigned config (needs a real TPU slice)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    a = ap.parse_args()
-    tc = TrainConfig(arch=a.arch, smoke=a.smoke, ode=a.ode == "on",
-                     ode_steps=a.ode_steps, steps=a.steps,
-                     global_batch=a.global_batch, seq_len=a.seq_len,
-                     microbatches=a.microbatches, compress=a.compress,
-                     ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
-                     production_mesh=a.production_mesh,
-                     multi_pod=a.multi_pod)
-    train(tc)
+    a = ap.parse_args(argv)
+    loop = a.loop or ("compressed" if a.compress else "standard")
+    cfg = TrainerConfig(
+        arch=a.arch, smoke=a.smoke, ode=a.ode == "on",
+        ode_steps=a.ode_steps, ode_method=a.ode_method,
+        ode_backend=a.ode_backend, ode_batch_axis=a.ode_batch_axis,
+        steps=a.steps, global_batch=a.global_batch, seq_len=a.seq_len,
+        microbatches=a.microbatches, loop=loop, ckpt_dir=a.ckpt_dir,
+        ckpt_every=a.ckpt_every, keep=a.keep, seed=a.seed,
+        log_every=a.log_every,
+        emit="jsonl" if a.metrics_jsonl else "stdout",
+        metrics_path=a.metrics_jsonl,
+        production_mesh=a.production_mesh, multi_pod=a.multi_pod)
+    final = Trainer(cfg).train()
+    print(f"final_step={final}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Model substrate: attention/MoE/SSM/xLSTM blocks + continuous-depth LM."""
 from .lm import (ServeState, decode_step, init_lm, init_serve_state, lm_loss,
-                 prefill)
+                 lm_loss_and_stats, prefill)
 from .transformer import init_blocks, init_cache, n_cache_slots
 
-__all__ = ["init_lm", "lm_loss", "prefill", "decode_step", "init_serve_state",
-           "ServeState", "init_blocks", "init_cache", "n_cache_slots"]
+__all__ = ["init_lm", "lm_loss", "lm_loss_and_stats", "prefill",
+           "decode_step", "init_serve_state", "ServeState", "init_blocks",
+           "init_cache", "n_cache_slots"]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core.interface import RunStats
 from .common import embed_init, rmsnorm, rmsnorm_init, softcap
 from .transformer import blocks_serve, blocks_train, init_blocks, init_cache
 
@@ -54,10 +55,12 @@ def _embed(params: Pytree, cfg: ModelConfig, batch: Pytree) -> jax.Array:
 
 
 def backbone_train(params: Pytree, cfg: ModelConfig, batch: Pytree
-                   ) -> jax.Array:
+                   ) -> Tuple[jax.Array, RunStats]:
+    """Returns (final hidden states, summed ODE RunStats — detached int32
+    counters from every residual-branch solve; zeros with ode.mode='off')."""
     x = _embed(params, cfg, batch)
-    x = blocks_train(params["blocks"], cfg, x, None)
-    return rmsnorm(params["final_norm"], x)
+    x, stats = blocks_train(params["blocks"], cfg, x, None)
+    return rmsnorm(params["final_norm"], x), stats
 
 
 def chunked_ce_loss(h: jax.Array, head: jax.Array, labels: jax.Array,
@@ -88,10 +91,23 @@ def chunked_ce_loss(h: jax.Array, head: jax.Array, labels: jax.Array,
     return total / jnp.maximum(count, 1)
 
 
+def lm_loss_and_stats(params: Pytree, cfg: ModelConfig, batch: Pytree
+                      ) -> Tuple[jax.Array, RunStats]:
+    """Like :func:`lm_loss` but also returns the integration accounting.
+
+    The stats are the ``has_aux`` side of the train step's value_and_grad:
+    already stop_gradient-detached inside the backbone, so they thread out
+    of a jitted (and microbatch-scanned) step without touching the float0
+    tangent machinery (R002c).
+    """
+    h, stats = backbone_train(params, cfg, batch)
+    loss = chunked_ce_loss(h, _head_matrix(params, cfg), batch["labels"], cfg)
+    return loss, stats
+
+
 def lm_loss(params: Pytree, cfg: ModelConfig, batch: Pytree) -> jax.Array:
     """batch: {'tokens' | 'embeds', 'labels'} with labels already shifted."""
-    h = backbone_train(params, cfg, batch)
-    return chunked_ce_loss(h, _head_matrix(params, cfg), batch["labels"], cfg)
+    return lm_loss_and_stats(params, cfg, batch)[0]
 
 
 # ---------------------------------------------------------------------------

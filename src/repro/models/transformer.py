@@ -21,6 +21,7 @@ from jax import lax
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.core import solve
+from repro.core.interface import RunStats
 from .attention import (KVCache, attention_decode, attention_prefill,
                         attention_train, init_attention)
 from .common import rmsnorm, rmsnorm_init
@@ -92,14 +93,43 @@ def _mlp_train_fn(cfg: ModelConfig, spec: LayerSpec, eval_mode: bool = False):
     return lambda p, z: apply_mlp(p, z)
 
 
+def zero_run_stats() -> RunStats:
+    z = jnp.zeros((), jnp.int32)
+    return RunStats(z, z, z)
+
+
+def _detach_counter(c: jax.Array) -> jax.Array:
+    # lax.stop_gradient is a no-op on integer dtypes, so a custom_vjp's
+    # instantiated float0 tangent (R002c) rides through it and crashes the
+    # first arithmetic op under a jvp trace (grad-of-scan, vmap-of-grad).
+    # The int -> f32 conversion has no tangent space, so its jvp emits a
+    # real float32 zero; stop_gradient then binds for real.
+    return lax.stop_gradient(c.astype(jnp.float32)).astype(jnp.int32)
+
+
+def add_run_stats(a: RunStats, b: RunStats) -> RunStats:
+    return RunStats(a.n_accepted + b.n_accepted,
+                    a.n_rejected + b.n_rejected,
+                    a.n_fevals + b.n_fevals)
+
+
 def _residual_branch(cfg: ModelConfig, branch_params: Pytree, x: jax.Array,
-                     inner) -> jax.Array:
+                     inner) -> Tuple[jax.Array, RunStats]:
     """Apply one residual branch discretely or as a Neural ODE.
 
     The ODE state (z, v) is kept in f32 — ALF's exact reversibility is a
     float-rounding property, and bf16 state would visibly degrade the
     backward reconstruction; ``f`` itself still computes in the model dtype
     (cast at the norm boundary). The discrete path is untouched.
+
+    Returns the branch output and the solve's :class:`RunStats`. The raw
+    counters are custom_vjp primal outputs — instantiated float0 tangents
+    under a jvp trace (R002c) — so they are laundered through
+    ``lax.stop_gradient`` before any cross-branch arithmetic, and only
+    float0-tolerant ops (add, scan carry) ever touch them: a ``jnp.sum``
+    here would hit ``reduce_sum`` on the instantiated float0 tangent and
+    crash under grad-of-scan. ``solve`` already returns scalar totals, so
+    no reduction is needed.
     """
     cdt = jnp.dtype(cfg.compute_dtype)
 
@@ -110,25 +140,30 @@ def _residual_branch(cfg: ModelConfig, branch_params: Pytree, x: jax.Array,
     p = {"norm": branch_params["norm"], "inner": branch_params["inner"]}
     ode = cfg.ode
     if ode.mode == "off":
-        return x + inner(p["inner"], rmsnorm(p["norm"], x))
+        return x + inner(p["inner"], rmsnorm(p["norm"], x)), zero_run_stats()
     solver, controller, gradient, saveat = ode.as_objects()
-    zT = solve(dynamics, p, x.astype(jnp.float32), 0.0, ode.t1,
-               solver=solver, controller=controller, gradient=gradient,
-               saveat=saveat).ys
-    return zT.astype(x.dtype)
+    sol = solve(dynamics, p, x.astype(jnp.float32), 0.0, ode.t1,
+                solver=solver, controller=controller, gradient=gradient,
+                saveat=saveat, batching=ode.batching())
+    stats = RunStats(*(_detach_counter(c)
+                       for c in (sol.stats.n_accepted, sol.stats.n_rejected,
+                                 sol.stats.n_fevals)))
+    return sol.ys.astype(x.dtype), stats
 
 
 def layer_train(params: Pytree, cfg: ModelConfig, spec: LayerSpec,
-                x: jax.Array, positions: jax.Array = None) -> jax.Array:
+                x: jax.Array, positions: jax.Array = None
+                ) -> Tuple[jax.Array, RunStats]:
     mixer = _mixer_train_fn(cfg, spec, None)
-    x = _residual_branch(
+    x, stats = _residual_branch(
         cfg, {"norm": params["mixer_norm"], "inner": params["mixer"]}, x,
         mixer)
     if spec.mlp != "none":
         mlp = _mlp_train_fn(cfg, spec)
-        x = _residual_branch(
+        x, s2 = _residual_branch(
             cfg, {"norm": params["mlp_norm"], "inner": params["mlp"]}, x, mlp)
-    return x
+        stats = add_run_stats(stats, s2)
+    return x, stats
 
 
 def init_blocks(key: jax.Array, cfg: ModelConfig) -> Pytree:
@@ -152,18 +187,27 @@ def init_blocks(key: jax.Array, cfg: ModelConfig) -> Pytree:
 
 
 def blocks_train(params: Pytree, cfg: ModelConfig, x: jax.Array,
-                 positions: jax.Array) -> jax.Array:
+                 positions: jax.Array) -> Tuple[jax.Array, RunStats]:
+    """Returns (activations, summed ODE RunStats over every residual branch).
+
+    Stats counters are detached int32 scalars (see ``_residual_branch``), so
+    carrying their sum through the period scan is float0-safe.
+    """
+    stats = zero_run_stats()
     for i, spec in enumerate(cfg.prelude):
-        x = layer_train(params["prelude"][i], cfg, spec, x, positions)
+        x, s = layer_train(params["prelude"][i], cfg, spec, x, positions)
+        stats = add_run_stats(stats, s)
 
     if cfg.period:
-        def period_fn(xc, pp):
+        def period_fn(carry, pp):
+            xc, sc = carry
             for j, spec in enumerate(cfg.period):
-                xc = layer_train(pp[f"sub{j}"], cfg, spec, xc, positions)
-            return xc, None
+                xc, s = layer_train(pp[f"sub{j}"], cfg, spec, xc, positions)
+                sc = add_run_stats(sc, s)
+            return (xc, sc), None
 
-        x, _ = lax.scan(period_fn, x, params["period"])
-    return x
+        (x, stats), _ = lax.scan(period_fn, (x, stats), params["period"])
+    return x, stats
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,117 @@
+"""Resumable training state: what a checkpoint must carry to continue a
+run *bit-identically*.
+
+The state is more than (params, optimizer): the RNG key and — critically —
+the solver/gradient configuration are part of it. A run trained with
+``gradient=MALI(...)`` produces a different parameter trajectory than one
+trained with ``Naive()`` at the same seed (different rounding, different
+step placement under adaptive control), so silently resuming under a
+different integrator corrupts the run while looking healthy. Every
+checkpoint therefore embeds a :func:`config_fingerprint` of the model's
+ODE settings + optimizer config + data/loop knobs, and
+:func:`restore_train_state` refuses a mismatched resume with
+:class:`ConfigMismatchError`.
+
+``ConfigMismatchError`` deliberately subclasses plain ``Exception`` — not
+RuntimeError/OSError/ValueError — so it propagates straight through
+``distributed.fault_tolerance.run_with_recovery`` (which retries those
+three) instead of being retried forever against the same checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.checkpoint import restore_latest
+from repro.configs.base import ModelConfig
+from repro.optim.compression import EFState
+from repro.optim.optimizer import OptimizerConfig, OptState
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    """Everything array-valued a resume needs (the fingerprint rides in the
+    checkpoint manifest next to it)."""
+    params: Pytree
+    opt: OptState
+    ef: Optional[EFState]    # error-feedback carry (None for StandardLoop)
+    rng: jax.Array           # PRNG key folded per step
+
+
+class ConfigMismatchError(Exception):
+    """A checkpoint's config fingerprint disagrees with the current run's.
+
+    Not a RuntimeError/ValueError subclass on purpose: run_with_recovery
+    retries those, and a config mismatch never heals by retrying.
+    """
+
+
+def config_fingerprint(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                       arch: str, loop: str, microbatches: int, seed: int,
+                       global_batch: int, seq_len: int) -> Dict[str, Any]:
+    """JSON-able config payload + a stable short hash over it.
+
+    Covers everything that steers the parameter trajectory: the full ODE
+    settings (method/solver/steps/tolerances/backend), the optimizer
+    schedule, the data shape/seed, and the loop/microbatch split.
+    """
+    payload = {
+        "arch": arch,
+        "ode": dataclasses.asdict(cfg.ode),
+        "opt": dataclasses.asdict(opt_cfg),
+        "loop": loop,
+        "microbatches": microbatches,
+        "seed": seed,
+        "global_batch": global_batch,
+        "seq_len": seq_len,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+    }
+    digest = hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:16]
+    return {"config": payload, "config_hash": digest}
+
+
+def state_tree(state: TrainState) -> Dict[str, Any]:
+    """The checkpointed pytree. ``ef=None`` contributes no leaves, so a
+    StandardLoop checkpoint and its restore template agree structurally."""
+    return {"params": state.params, "opt": state.opt, "ef": state.ef,
+            "rng": state.rng}
+
+
+def restore_train_state(ckpt_dir: str, like: TrainState,
+                        fingerprint: Dict[str, Any]
+                        ) -> Optional[Tuple[int, TrainState, dict]]:
+    """Restore the latest checkpoint into ``like``'s structure.
+
+    Returns (step, state, metadata) or None when the directory holds no
+    checkpoint. Raises :class:`ConfigMismatchError` when the checkpoint
+    was written under a different config fingerprint (different
+    integrator/optimizer/data settings — resuming would silently change
+    the training trajectory).
+    """
+    got = restore_latest(ckpt_dir, state_tree(like))
+    if got is None:
+        return None
+    step, tree, meta = got
+    saved = meta.get("config_hash")
+    want = fingerprint["config_hash"]
+    if saved is not None and saved != want:
+        saved_cfg = meta.get("config", {})
+        diff = {k: (saved_cfg.get(k), fingerprint["config"].get(k))
+                for k in set(saved_cfg) | set(fingerprint["config"])
+                if saved_cfg.get(k) != fingerprint["config"].get(k)}
+        raise ConfigMismatchError(
+            f"checkpoint at step {step} in {ckpt_dir!r} was written under a "
+            f"different training config (hash {saved} != {want}); "
+            f"differing fields: {diff}. Resuming would silently change the "
+            "parameter trajectory — restart with the original config or a "
+            "fresh ckpt dir.")
+    state = TrainState(params=tree["params"], opt=tree["opt"],
+                       ef=tree["ef"], rng=tree["rng"])
+    return step, state, meta

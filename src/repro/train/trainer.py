@@ -1,0 +1,253 @@
+"""The Trainer: resumable, fault-tolerant continuous-depth training.
+
+Composes the whole substrate behind one object::
+
+    from repro.train import Trainer, TrainerConfig
+    t = Trainer(TrainerConfig(steps=20, ckpt_dir="/tmp/run1"))
+    t.train()
+    t.loss_trace()      # per-step losses (records survive restarts)
+
+The model's residual branches are native ``solve()`` calls —
+``gradient=MALI(...)`` (or naive/aca/adjoint), ``ALF(backend='pallas')``
+when an accelerator is present (``ode_backend='auto'``), and
+``Sharded(axis, inner=Lockstep())`` batching over the ambient mesh when
+``ode_batch_axis`` names one. The loop driver is a registered
+:class:`~repro.train.loop.TrainLoop`; the jitted step is the module-level
+value-hash-keyed ``jitted_train_step`` (one trace per distinct config
+*value*, not instance).
+
+Resumability: every checkpoint carries ``(params, opt, ef, rng)`` plus the
+:func:`~repro.train.state.config_fingerprint` of the integrator/optimizer
+settings, and a resume under a different config raises
+:class:`~repro.train.state.ConfigMismatchError` instead of silently
+continuing a different trajectory. Failures inside the loop restart from
+the latest checkpoint via ``run_with_recovery``; because batches are pure
+functions of (seed, step) and the step is deterministic, the recomputed
+post-checkpoint steps reproduce the uninterrupted run's loss trace
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, list_checkpoints
+from repro.configs import get_config, smoke_config
+from repro.core.ode_block import OdeSettings
+from repro.data.synthetic import DataConfig, make_batch
+from repro.distributed.fault_tolerance import run_with_recovery
+from repro.distributed.sharding import (batch_shardings, opt_state_shardings,
+                                        param_shardings, replicated)
+from repro.launch.hlo_cost import count_pallas_launches
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import init_lm
+from repro.optim.optimizer import OptimizerConfig, OptState, init_opt_state
+from repro.train.loop import get_train_loop, train_step
+from repro.train.metrics import (MetricsEmitter, StepRecord, make_emitter,
+                                 ode_residual_bytes)
+from repro.train.state import (TrainState, config_fingerprint,
+                               restore_train_state, state_tree)
+
+log = logging.getLogger("repro.train")
+
+# The paper's default pairings (GradientMethod.default_solver()).
+_SOLVER_FOR = {"mali": "alf", "naive": "alf", "aca": "heun_euler",
+               "adjoint": "dopri5"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """Value-hashable run description (frozen: equal values reuse traces)."""
+    arch: str = "qwen3-1.7b"
+    smoke: bool = True              # reduced config; --full on a real slice
+    ode: bool = True                # continuous depth on/off
+    ode_steps: int = 2              # 0 = adaptive controller
+    ode_method: str = "mali"        # mali | naive | aca | adjoint
+    ode_backend: str = "auto"       # auto | reference | pallas
+    ode_batch_axis: str = ""        # mesh axis for Sharded() solves; '' = off
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 64
+    microbatches: int = 1
+    loop: str = "standard"          # TRAIN_LOOPS key
+    ckpt_dir: str = ""
+    ckpt_every: int = 20
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 10
+    emit: str = "stdout"            # EMITTERS key
+    metrics_path: str = ""          # for emit='jsonl'
+    production_mesh: bool = False   # needs a real multi-chip slice
+    multi_pod: bool = False
+    max_failures: int = 3
+
+    def ode_settings(self) -> OdeSettings:
+        if not self.ode:
+            return OdeSettings(mode="off")
+        backend = self.ode_backend
+        if backend == "auto":
+            backend = ("pallas" if jax.default_backend() != "cpu"
+                       else "reference")
+        return OdeSettings(
+            mode="per_block", method=self.ode_method,
+            solver=_SOLVER_FOR[self.ode_method], n_steps=self.ode_steps,
+            backend=backend, batch_axis=self.ode_batch_axis or None)
+
+
+def build(tc: TrainerConfig):
+    """(model config, mesh, optimizer config) for one run description."""
+    ode = tc.ode_settings()
+    cfg = (smoke_config(tc.arch, ode) if tc.smoke
+           else get_config(tc.arch, ode))
+    mesh = (make_production_mesh(multi_pod=tc.multi_pod)
+            if tc.production_mesh else make_host_mesh())
+    opt_cfg = OptimizerConfig(total_steps=tc.steps,
+                              warmup_steps=max(tc.steps // 20, 1))
+    return cfg, mesh, opt_cfg
+
+
+class Trainer:
+    """One training run. ``step_hook(step)`` (if given) runs before each
+    step on the host — the fault-injection point for recovery tests."""
+
+    def __init__(self, config: TrainerConfig,
+                 emitter: Optional[MetricsEmitter] = None,
+                 step_hook: Optional[Callable[[int], None]] = None):
+        self.config = config
+        self.cfg, self.mesh, self.opt_cfg = build(config)
+        self.loop = get_train_loop(config.loop)
+        self.emitter = emitter if emitter is not None else make_emitter(
+            config.emit, config.metrics_path)
+        self.step_hook = step_hook
+        self.records: Dict[int, StepRecord] = {}
+        self.pallas_launches = 0
+        self._state: Optional[TrainState] = None
+
+    @property
+    def state(self) -> Optional[TrainState]:
+        """Final :class:`TrainState` after :meth:`train` (None before)."""
+        return self._state
+
+    def loss_trace(self):
+        """Per-step losses in step order. Restarted steps overwrite their
+        first attempt, so after a recovery this equals the uninterrupted
+        run's trace (the continuity property the tests assert)."""
+        return [self.records[s].loss for s in sorted(self.records)]
+
+    def train(self) -> int:
+        tc = self.config
+        cfg, mesh, opt_cfg = self.cfg, self.mesh, self.opt_cfg
+        dcfg = DataConfig(seed=tc.seed, global_batch=tc.global_batch,
+                          seq_len=tc.seq_len)
+        fingerprint = config_fingerprint(
+            cfg, opt_cfg, arch=tc.arch, loop=tc.loop,
+            microbatches=tc.microbatches, seed=tc.seed,
+            global_batch=tc.global_batch, seq_len=tc.seq_len)
+        ckpt = (AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep)
+                if tc.ckpt_dir else None)
+        residual_bytes = ode_residual_bytes(
+            cfg, tc.global_batch // max(tc.microbatches, 1), tc.seq_len)
+        compress = self.loop.name == "compressed"
+
+        with mesh:
+            params = init_lm(jax.random.PRNGKey(tc.seed), cfg)
+            p_sh = param_shardings(cfg, mesh, params)
+            o_sh = OptState(replicated(mesh),
+                            *(opt_state_shardings(cfg, mesh, p_sh,
+                                                  params),) * 3)
+            params = jax.device_put(params, p_sh)
+            opt_state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s),
+                init_opt_state(opt_cfg, params),
+                OptState(o_sh.step, o_sh.m, o_sh.v, o_sh.master))
+            state = TrainState(params, opt_state,
+                               self.loop.init_carry(params),
+                               jax.random.PRNGKey(tc.seed + 1))
+            zero1 = mesh.size > 1
+            b_sh = None
+
+            def put_batch(step: int):
+                nonlocal b_sh
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in make_batch(cfg, dcfg, step).items()}
+                if b_sh is None:
+                    b_sh = batch_shardings(cfg, mesh, batch)
+                return {k: jax.device_put(v, b_sh[k])
+                        for k, v in batch.items()}
+
+            batch0 = put_batch(0)
+            carry0 = state.ef
+            self.pallas_launches = count_pallas_launches(
+                lambda p, o, b: train_step(
+                    p, o, carry0, b, cfg=cfg, opt_cfg=opt_cfg,
+                    microbatches=tc.microbatches, compress=compress,
+                    zero1=False),
+                state.params, state.opt, batch0)
+
+            def train_loop(resume: Optional[int]) -> int:
+                nonlocal state
+                start = 0
+                if resume is not None and ckpt is not None:
+                    got = restore_train_state(tc.ckpt_dir, state, fingerprint)
+                    if got is not None:
+                        start, restored, _meta = got
+                        state = TrainState(
+                            jax.device_put(restored.params, p_sh),
+                            restored.opt, restored.ef, restored.rng)
+                        log.info("resumed from step %d", start)
+                for step in range(start, tc.steps):
+                    if self.step_hook is not None:
+                        self.step_hook(step)
+                    t0 = time.time()
+                    batch = put_batch(step) if step else batch0
+                    p, o, carry, metrics = self.loop.step(
+                        state.params, state.opt, state.ef, batch, cfg=cfg,
+                        opt_cfg=opt_cfg, microbatches=tc.microbatches,
+                        zero1=zero1)
+                    loss = float(metrics["loss"])   # syncs the step
+                    if not np.isfinite(loss):
+                        raise RuntimeError(f"non-finite loss at step {step}")
+                    state = TrainState(p, o, carry,
+                                       jax.random.fold_in(state.rng, step))
+                    rec = StepRecord(
+                        step=step, loss=loss, lr=float(metrics["lr"]),
+                        grad_norm=float(metrics["grad_norm"]),
+                        wall_s=time.time() - t0,
+                        fevals=int(metrics["ode_fevals"]),
+                        accepted=int(metrics["ode_accepted"]),
+                        rejected=int(metrics["ode_rejected"]),
+                        residual_bytes=residual_bytes,
+                        pallas_launches=self.pallas_launches)
+                    self.records[step] = rec
+                    self.emitter.emit(rec)
+                    if step % tc.log_every == 0 or step == tc.steps - 1:
+                        log.info("step %d loss %.4f lr %.2e gnorm %.2f "
+                                 "fevals %d", step, loss, rec.lr,
+                                 rec.grad_norm, rec.fevals)
+                    if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+                        ckpt.save(step + 1, state_tree(state),
+                                  metadata={**fingerprint, "loss": loss})
+                return tc.steps
+
+            def restore_step() -> Optional[int]:
+                if ckpt is None:
+                    return None
+                ckpt.wait()   # a crash may race an in-flight save
+                ckpts = list_checkpoints(tc.ckpt_dir)
+                return ckpts[-1][0] if ckpts else None
+
+            final, rstats = run_with_recovery(
+                train_loop, restore_step, max_failures=tc.max_failures)
+            if ckpt is not None:
+                ckpt.save(final, state_tree(state),
+                          metadata={**fingerprint, "final": True})
+                ckpt.close()
+            self.emitter.close()
+            self._state = state
+            log.info("done: step %d (failures=%d)", final, rstats.failures)
+            return final

@@ -76,7 +76,7 @@ def test_prefill_decode_matches_train_forward(arch):
     s_pre, n_dec = S - 4, 4
 
     # full training-mode forward logits at each position
-    h = backbone_train(params, cfg, batch)
+    h, _ = backbone_train(params, cfg, batch)
     from repro.models.common import rmsnorm as _rn  # noqa
     full_logits = np.asarray(
         (jnp.einsum("bsd,dv->bsv",
@@ -108,7 +108,7 @@ def _final_h(params, cfg, batch):
     from repro.models.transformer import blocks_train
     from repro.models.lm import _embed
     x = _embed(params, cfg, batch)
-    x = blocks_train(params["blocks"], cfg, x, None)
+    x, _ = blocks_train(params["blocks"], cfg, x, None)
     return rmsnorm(params["final_norm"], x)
 
 
