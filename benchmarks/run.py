@@ -23,7 +23,7 @@ from .common import print_rows
 BENCHES = ("toy_gradient_error", "memory_cost", "solver_invariance",
            "speed", "damped", "adversarial", "observation_grid",
            "batched_throughput", "event_dense", "serve_load",
-           "train_memory")
+           "train_memory", "cnf_bits_dim")
 
 
 def _dryrun_summary_rows():

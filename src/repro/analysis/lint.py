@@ -2,11 +2,11 @@
 
 Rule scoping (which invariant lives where):
 
-* R001 (traced branches)      -> core/, kernels/, launch/
-* R002 (custom_vjp hygiene)   -> core/, launch/
+* R001 (traced branches)      -> core/, kernels/, cnf/
+* R002 (custom_vjp hygiene)   -> core/, launch/, cnf/
 * R003 (Pallas contracts)     -> kernels/
 * R004 (registry complete)    -> repo-level (runtime introspection)
-* R005 (signed buffers)       -> core/
+* R005 (signed buffers)       -> core/, cnf/
 
 ``lint_source`` is the in-memory entry point the fixture tests use;
 ``run_lint`` walks the real tree. Suppress a finding with
@@ -25,10 +25,10 @@ from .rules.common import (Violation, apply_suppressions,
 
 # rule id -> source subtrees (relative to src/repro) it applies to
 RULE_SCOPE = {
-    "R001": ("core", "kernels"),
-    "R002": ("core", "launch"),
+    "R001": ("core", "kernels", "cnf"),
+    "R002": ("core", "launch", "cnf"),
     "R003": ("kernels",),
-    "R005": ("core",),
+    "R005": ("core", "cnf"),
 }
 
 

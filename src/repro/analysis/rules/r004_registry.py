@@ -83,13 +83,18 @@ def _load_registries():
 
     emitters = {cls: {key} for key, cls in EMITTERS.items()}
 
+    # CNF trace estimators (PR 10): string-reachable through
+    # repro.cnf.get_estimator, so same completeness contract.
+    from repro.cnf import TRACE_ESTIMATORS, TraceEstimator
+
     return [(Solver, solvers), (GradientMethod, methods),
             (Batching, batchings),
             (AdmissionPolicy, by_class(ADMISSION_POLICIES)),
             (SchedulingPolicy, by_class(SCHEDULING_POLICIES)),
             (CachePolicy, by_class(CACHE_POLICIES)),
             (TrainLoop, by_class(TRAIN_LOOPS)),
-            (MetricsEmitter, emitters)]
+            (MetricsEmitter, emitters),
+            (TraceEstimator, by_class(TRACE_ESTIMATORS))]
 
 
 def check_registries(tests_dir) -> List[Violation]:

@@ -32,6 +32,13 @@ so checkpoint restore templates match the live state, the frozen configs
 that ride as jit statics must value-hash, and one trace must serve a run
 rebuilt from fresh equal-valued configs (the checkpoint-resume path).
 
+A fifth sweep (:func:`run_cnf_audit`, PR 10) covers the CNF subsystem:
+``CNF.log_prob`` shapes across the trace-estimator x gradient-method
+matrix, abstract reverse mode through params AND the integration bound
+(``diff_bounds=True`` exercises the ts-cotangent slot of every
+custom_vjp), the validation errors on unservable pairings, and the
+value-hash contract on the frozen flow/estimator statics.
+
 Emits the dict that ``python -m repro.analysis`` merges into
 ``analysis_report.json``.
 """
@@ -421,6 +428,149 @@ def run_train_audit():
 
 
 # --------------------------------------------------------------------------
+# CNF audit (PR 10): augmented solves + grad-through-bounds
+# --------------------------------------------------------------------------
+
+def _cnf_vfield(params, z, t):
+    # module-level on purpose: CNF is a frozen dataclass that rides as a
+    # jit static, and dataclass equality compares ``vfield`` by identity —
+    # a fresh lambda per instance would retrace (correctly).
+    return jnp.tanh(z @ params["w"]) + t * params["b"]
+
+
+def run_cnf_audit():
+    """Audit the CNF subsystem without touching a device.
+
+    Shape side: ``CNF.log_prob`` must emit (B,) f32 logp/logdet/kinetic
+    for every trace-estimator x gradient-method pairing, and abstract
+    reverse mode must go through BOTH params and the integration bound
+    ``t1`` (``diff_bounds=True`` threads a ts-cotangent through every
+    custom_vjp — ``eval_shape(grad)`` catches a residual/shape mismatch
+    in any of them without executing a step). Invalid pairings
+    (diff_bounds x steps-trajectory, diff_bounds x Sharded, Hutchinson
+    without a key) must raise their validation errors rather than
+    silently returning zero bound-gradients. Returns
+    (n_combos, [failures], {retrace-case: count}).
+    """
+    from repro.cnf import CNF, Exact, Hutchinson
+    from repro.core import ALF, MALI, ConstantSteps, Naive, SaveAt, solve
+    from repro.core.interface import Sharded
+
+    failures: List[str] = []
+    combos = 0
+    p_spec = _param_specs()
+    x_spec = jax.ShapeDtypeStruct((B, D), F32)
+    t1_spec = jax.ShapeDtypeStruct((), F32)
+    key = jax.random.PRNGKey(0)
+
+    estimators = [("exact", Exact(), False),
+                  ("hutchinson", Hutchinson(), True),
+                  ("hutchinson_gaussian", Hutchinson(dist="gaussian"), True)]
+    methods = [("mali", MALI(), ALF()), ("naive", Naive(), ALF())]
+
+    for est_name, est, needs_key in estimators:
+        flow = CNF(_cnf_vfield, dim=D, estimator=est)
+        for m_name, gradient, solver in methods:
+            name = f"cnf:logprob/{m_name}/{est_name}"
+
+            def logp(p, x, t1, *, fl=flow, sv=solver, gr=gradient,
+                     k=(key if needs_key else None)):
+                return fl.log_prob(p, x, k, solver=sv,
+                                   controller=ConstantSteps(4), gradient=gr,
+                                   t1=t1, diff_bounds=True)
+
+            combos += 1
+            try:
+                res = jax.eval_shape(
+                    lambda p, x, fn=logp: fn(p, x, jnp.float32(1.0)),
+                    p_spec, x_spec)
+            except Exception as e:  # noqa: BLE001 — report, don't abort
+                failures.append(f"{name}: eval_shape raised "
+                                f"{type(e).__name__}: {e}")
+                continue
+            for field in ("logp", "logdet", "kinetic"):
+                failures.extend(_expect(f"{name}.{field}",
+                                        getattr(res, field), (B,), F32))
+
+            combos += 1
+            gname = f"cnf:grad/{m_name}/{est_name}"
+            try:
+                g_p, g_t1 = jax.eval_shape(
+                    jax.grad(lambda p, x, t1, fn=logp:
+                             -jnp.mean(fn(p, x, t1).logp),
+                             argnums=(0, 2)), p_spec, x_spec, t1_spec)
+            except Exception as e:  # noqa: BLE001 — report, don't abort
+                failures.append(f"{gname}: eval_shape(grad) raised "
+                                f"{type(e).__name__}: {e}")
+                continue
+            failures.extend(_expect(f"{gname}.d_t1", g_t1, (), F32))
+            ins = jax.tree_util.tree_leaves_with_path(p_spec)
+            outs = jax.tree_util.tree_leaves_with_path(g_p)
+            for (path_i, leaf_i), (path_o, leaf_o) in zip(ins, outs):
+                where = jax.tree_util.keystr(path_i)
+                if path_i != path_o or \
+                        tuple(leaf_o.shape) != tuple(leaf_i.shape):
+                    failures.append(
+                        f"{gname}.d_params{where}: {leaf_o.shape} != "
+                        f"param spec {leaf_i.shape}")
+
+    # Validation errors on the pairings diff_bounds cannot serve: no fixed
+    # observation grid (steps trajectory), closed-over grid (Sharded), and
+    # a Hutchinson solve with no probe key.
+    f = _dynamics()
+    z_spec = jax.ShapeDtypeStruct((D,), F32)
+    invalid = [
+        ("cnf:invalid/diff_bounds+steps",
+         lambda: jax.eval_shape(
+             lambda z, p: solve(f, p, z, 0.0, 1.0,
+                                controller=ConstantSteps(4),
+                                saveat=SaveAt(steps=True),
+                                diff_bounds=True), z_spec, p_spec)),
+        ("cnf:invalid/diff_bounds+sharded",
+         lambda: jax.eval_shape(
+             lambda z, p: solve(f, p, z, 0.0, 1.0,
+                                controller=ConstantSteps(4),
+                                batching=Sharded(),
+                                diff_bounds=True), x_spec, p_spec)),
+        ("cnf:invalid/hutchinson-no-key",
+         lambda: Hutchinson().init_noise(None, jnp.zeros((D,), F32))),
+    ]
+    for name, thunk in invalid:
+        combos += 1
+        try:
+            thunk()
+        except ValueError:
+            pass
+        except Exception as e:  # noqa: BLE001 — wrong error class
+            failures.append(f"{name}: raised {type(e).__name__} "
+                            f"({e}), want ValueError")
+        else:
+            failures.append(f"{name}: validation silently passed "
+                            "(want ValueError)")
+
+    # Retrace contract: CNF/estimator are frozen dataclasses, so a fresh
+    # equal-valued flow must reuse the trace (the training-step path).
+    traces = {"n": 0}
+
+    def body(p, x, k, *, flow, solver, controller, gradient):
+        traces["n"] += 1
+        return flow.log_prob(p, x, k, solver=solver, controller=controller,
+                             gradient=gradient)
+
+    jitted = jax.jit(body, static_argnames=("flow", "solver", "controller",
+                                            "gradient"))
+    zeros_p = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), p_spec)
+    x = jnp.zeros((B, D), F32)
+    for _ in range(2):
+        jitted.trace(zeros_p, x, key,
+                     flow=CNF(_cnf_vfield, dim=D, estimator=Hutchinson()),
+                     solver=ALF(), controller=ConstantSteps(4),
+                     gradient=MALI())
+    return combos, failures, {"cnf:logprob/mali-hutchinson": traces["n"]}
+
+
+# --------------------------------------------------------------------------
 # Retrace audit
 # --------------------------------------------------------------------------
 
@@ -506,6 +656,10 @@ def run_trace_audit() -> dict:
     combos += train_combos
     failures += train_failures
     retrace.update(train_retrace)
+    cnf_combos, cnf_failures, cnf_retrace = run_cnf_audit()
+    combos += cnf_combos
+    failures += cnf_failures
+    retrace.update(cnf_retrace)
     retrace_failures = [f"retrace:{name}: traced {n} times (want 1) — a "
                         f"static config object hashes by identity"
                         for name, n in retrace.items() if n != 1]

@@ -1,0 +1,13 @@
+"""repro.cnf — FFJORD-class continuous normalizing flows on solve().
+
+See README.md in this directory for the estimator catalogue and the
+fixed-noise-per-solve rationale.
+"""
+from .estimators import (TRACE_ESTIMATORS, Exact, Hutchinson, TraceEstimator,
+                         get_estimator)
+from .flow import CNF, CNFResult
+from .losses import bits_per_dim, cnf_loss, nll_nats
+
+__all__ = ["CNF", "CNFResult", "TraceEstimator", "Exact", "Hutchinson",
+           "TRACE_ESTIMATORS", "get_estimator", "nll_nats", "bits_per_dim",
+           "cnf_loss"]

@@ -1,0 +1,132 @@
+"""Trace-estimator axis of the CNF likelihood (paper §4.4 / FFJORD).
+
+The instantaneous change of variables needs ``tr(df/dz)`` along the flow;
+how that trace is computed is an axis of its own, mirroring the
+solver/gradient registries in ``repro.core``:
+
+* :class:`Exact` — sum of per-basis-vector JVPs (d dynamics
+  linearizations per state; exact, affordable at toy dimension).
+* :class:`Hutchinson` — the stochastic estimator ``E[eps^T J eps]`` with
+  Rademacher or Gaussian probes (1 extra JVP per state; the image-scale
+  FFJORD setting).
+
+Fixed-noise-per-solve semantics: the probe ``eps`` is sampled ONCE per
+solve (:meth:`TraceEstimator.init_noise`) and then rides in the solve
+carry as an augmented-state component with zero dynamics — NOT in Python
+state — so adaptive accept/reject re-evaluations of a trial step see the
+same noise, the estimate is a deterministic function of (params, x, key)
+under any step schedule, and the component maps correctly under
+``PerSample`` vmap and ``Sharded`` shard_map (params are closed over;
+state is what the batching axis maps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class TraceEstimator:
+    """Base of the trace-estimation axis. Subclasses are frozen
+    dataclasses (hashable — they ride inside the static CNF object)
+    implementing:
+
+    * ``init_noise(key, x)`` — the per-solve probe pytree (``None`` for
+      deterministic estimators), shaped like ``x``;
+    * ``value_and_trace(f, z, eps)`` — one dynamics evaluation plus the
+      trace estimate at a single state ``z`` of shape (d,);
+    * ``trace_fevals(dim)`` — f-eval-equivalents the trace costs per
+      dynamics evaluation (the ``Stats``-style accounting benchmarks
+      report).
+    """
+
+    name: str = "?"
+
+    def init_noise(self, key: Optional[jax.Array],
+                   x: jax.Array) -> Optional[jax.Array]:
+        raise NotImplementedError
+
+    def value_and_trace(self, f: Callable[[jax.Array], jax.Array],
+                        z: jax.Array,
+                        eps: Optional[jax.Array]) -> Tuple[jax.Array,
+                                                           jax.Array]:
+        raise NotImplementedError
+
+    def trace_fevals(self, dim: int) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Exact(TraceEstimator):
+    """Exact ``tr(df/dz)``: linearize ``f`` once at ``z`` and push the d
+    basis vectors through the JVP (O(d) f-eval-equivalents per state —
+    the oracle the Hutchinson estimator is checked against)."""
+
+    name = "exact"
+
+    def init_noise(self, key, x):
+        return None  # deterministic — no probe leaf in the solve carry
+
+    def value_and_trace(self, f, z, eps):
+        fz, jvp_fn = jax.linearize(f, z)
+        basis = jnp.eye(z.shape[-1], dtype=z.dtype)
+        diag = jax.vmap(lambda e: jnp.vdot(e, jvp_fn(e)))(basis)
+        return fz, jnp.sum(diag)
+
+    def trace_fevals(self, dim: int) -> int:
+        return dim
+
+
+@dataclasses.dataclass(frozen=True)
+class Hutchinson(TraceEstimator):
+    """Stochastic trace ``eps^T (df/dz) eps``: unbiased for any probe
+    distribution with identity covariance. ``dist='rademacher'`` (default;
+    minimum-variance among sign probes) or ``'gaussian'``. One JVP per
+    state regardless of d — the image-scale estimator."""
+
+    dist: str = "rademacher"
+
+    name = "hutchinson"
+
+    def __post_init__(self):
+        if self.dist not in ("rademacher", "gaussian"):
+            raise ValueError(
+                f"Hutchinson(dist={self.dist!r}): pass 'rademacher' or "
+                "'gaussian'")
+
+    def init_noise(self, key, x):
+        if key is None:
+            raise ValueError(
+                "Hutchinson trace estimation draws one probe per solve: "
+                "pass key= (a jax.random.PRNGKey) to log_prob/sample, or "
+                "use estimator=Exact()")
+        if self.dist == "gaussian":
+            return jax.random.normal(key, x.shape, x.dtype)
+        return jax.random.rademacher(key, x.shape, x.dtype)
+
+    def value_and_trace(self, f, z, eps):
+        fz, jv = jax.jvp(f, (z,), (eps,))
+        return fz, jnp.vdot(eps, jv)
+
+    def trace_fevals(self, dim: int) -> int:
+        return 1
+
+
+TRACE_ESTIMATORS = {
+    "exact": Exact(),
+    "hutchinson": Hutchinson(),
+    "hutchinson_gaussian": Hutchinson(dist="gaussian"),
+}
+
+
+def get_estimator(est: Union[str, TraceEstimator]) -> TraceEstimator:
+    """Resolve an estimator object or registry key (the string surface
+    mirrors ``get_solver``)."""
+    if isinstance(est, TraceEstimator):
+        return est
+    if est in TRACE_ESTIMATORS:
+        return TRACE_ESTIMATORS[est]
+    raise ValueError(f"unknown trace estimator {est!r}; available: "
+                     f"{tuple(sorted(TRACE_ESTIMATORS))}")

@@ -1,0 +1,137 @@
+"""FFJORD-class continuous normalizing flow on top of ``solve()``.
+
+A :class:`CNF` turns any vector field ``f(params, z, t)`` from
+``repro.models`` into a density model via the instantaneous change of
+variables (Chen et al. 2018)::
+
+    d z / dt      = f(z, t)
+    d logdet / dt = +tr(df/dz)         (so log p(x) = log N(z_T; 0, I)
+    d kinetic/ dt = |f|^2               + logdet_T)
+    d eps / dt    = 0                  (fixed Hutchinson probe; see
+                                        repro.cnf.estimators)
+
+The augmented state rides through the ordinary ``solve()`` front door, so
+every axis composes: MALI's O(T * N_z) residual claim survives the
+augmentation (benchmarks/cnf_bits_dim.py proves it end-to-end),
+``ALF(backend='pallas')`` fuses the augmented step algebra, ``Sharded``
+batching shard_maps the flow, and ``diff_bounds=True`` makes the
+integration span trainable (the FFJORD ``end_time`` parameter).
+
+Density direction convention (matches the pre-subsystem cnf_toy example):
+``log_prob`` integrates data -> base over [t0, t1] accumulating
+``+tr``; ``sample`` runs the same augmented dynamics in reverse time
+(t1 -> t0) from base noise — the existing reverse-time solve path, no
+separate inverse model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Solution, solve
+from repro.core.interface import Batching, SaveAt
+
+from .estimators import Hutchinson, TraceEstimator, get_estimator
+
+Pytree = Any
+VectorField = Callable[[Pytree, jax.Array, jax.Array], jax.Array]
+
+
+class CNFResult(NamedTuple):
+    """``log_prob`` output: per-sample log density (nats), the logdet and
+    kinetic-energy integrals, and the underlying :class:`Solution` (stats,
+    residual accounting, event/batching metadata)."""
+    logp: jax.Array
+    logdet: jax.Array
+    kinetic: jax.Array
+    solution: Solution
+
+
+@dataclasses.dataclass(frozen=True)
+class CNF:
+    """A continuous normalizing flow: static (hashable) model object
+    pairing a vector field with a trace estimator and a default span.
+
+    ``vfield(params, z, t)`` maps a SINGLE state of shape (dim,) to its
+    velocity; batch axes are handled here (vmapped inside the augmented
+    dynamics for batch-shaped states, mapped by the ``batching`` axis
+    otherwise), so one field definition serves unbatched, Lockstep,
+    PerSample and Sharded solves.
+    """
+
+    vfield: VectorField
+    dim: int
+    estimator: TraceEstimator = Hutchinson()
+    t0: float = 0.0
+    t1: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "estimator", get_estimator(self.estimator))
+
+    # -- augmented dynamics -------------------------------------------------
+
+    def _aug(self, params, state, t):
+        z, _, _, eps = state
+
+        def one(zi, ei):
+            fz, tr = self.estimator.value_and_trace(
+                lambda zz: self.vfield(params, zz, t), zi, ei)
+            return fz, tr, jnp.sum(fz ** 2)
+
+        if z.ndim == 1:
+            dz, dld, dk = one(z, eps)
+        else:
+            dz, dld, dk = jax.vmap(one)(z, eps)
+        d_eps = None if eps is None else jnp.zeros_like(eps)
+        return (dz, dld, dk, d_eps)
+
+    def _state0(self, x, key):
+        bshape = x.shape[:-1]
+        zeros = jnp.zeros(bshape, x.dtype)
+        return (x, zeros, zeros, self.estimator.init_noise(key, x))
+
+    def _base_logp(self, z):
+        return (-0.5 * jnp.sum(z ** 2, -1)
+                - 0.5 * self.dim * math.log(2.0 * math.pi))
+
+    # -- densities & sampling ----------------------------------------------
+
+    def log_prob(self, params: Pytree, x: jax.Array,
+                 key: Optional[jax.Array] = None, *,
+                 solver=None, controller=None, gradient=None,
+                 t0=None, t1=None, diff_bounds: bool = False,
+                 batching: Optional[Batching] = None) -> CNFResult:
+        """Per-sample ``log p(x)`` in nats for ``x`` of shape (..., dim).
+
+        ``key`` seeds the per-solve trace probe (required for Hutchinson;
+        ignored by Exact). ``t0``/``t1`` override the flow's span — pass
+        traced values with ``diff_bounds=True`` to train them. All solve
+        axes (solver/controller/gradient/batching) pass straight through.
+        """
+        t0 = self.t0 if t0 is None else t0
+        t1 = self.t1 if t1 is None else t1
+        sol = solve(self._aug, params, self._state0(x, key), t0, t1,
+                    solver=solver, controller=controller, gradient=gradient,
+                    batching=batching, diff_bounds=diff_bounds)
+        zT, logdet, kinetic, _ = sol.ys
+        return CNFResult(self._base_logp(zT) + logdet, logdet, kinetic, sol)
+
+    def sample(self, params: Pytree, key: jax.Array, n: int, *,
+               solver=None, controller=None, gradient=None,
+               saveat: Optional[SaveAt] = None,
+               batching: Optional[Batching] = None) -> Solution:
+        """Draw ``n`` samples: z ~ N(0, I), then the SAME augmented
+        dynamics integrated in reverse time t1 -> t0 (the sign-agnostic
+        solve path — no separate inverse network). Returns the
+        :class:`Solution`; ``ys[0]`` is the (n, dim) sample batch, or the
+        (T, n, dim) flow path under ``saveat=SaveAt(ts=descending_grid)``
+        (the Fig. 6-style visualization)."""
+        k_base, k_eps = jax.random.split(key)
+        z = jax.random.normal(k_base, (n, self.dim))
+        return solve(self._aug, params, self._state0(z, k_eps),
+                     self.t1, self.t0, solver=solver, controller=controller,
+                     gradient=gradient, saveat=saveat, batching=batching)

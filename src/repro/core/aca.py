@@ -27,11 +27,11 @@ from typing import Any, Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .alf import tree_add, tree_zeros_like
+from .alf import tree_add, tree_sub, tree_zeros_like
 from .integrate import (as_time_grid, integrate_grid, reverse_masked_scan,
                         reverse_segment_sweep, scalar_time_grid)
-from .interface import (GradientMethod, RunStats, make_run_stats,
-                        state_nbytes)
+from .interface import (GradientMethod, RunStats, bounds_cotangents,
+                        make_run_stats, state_nbytes)
 from .solvers import HeunEuler, RungeKutta, get_solver
 from .stepsize import StepController, controller_from_kwargs
 
@@ -46,6 +46,7 @@ class AcaConfig(NamedTuple):
     f: Dynamics
     solver: RungeKutta
     controller: StepController
+    diff_bounds: bool = False  # emit analytic dL/dts boundary cotangents
 
 
 def _aca_forward(cfg: AcaConfig, params, z0, ts):
@@ -67,13 +68,15 @@ def _aca_grid_fwd(cfg, params, z0, ts):
     out = (res.traj, make_run_stats(res.n_accepted, res.n_trials,
                                     cfg.solver.stages))
     # Residuals: the checkpointed per-step start states (the paper's O(N_t)
-    # term) + the recorded (t_i, h_i) replay script.
-    return out, (params, res.ts, res.hs, res.n_accepted, res.state_traj, ts)
+    # term) + the recorded (t_i, h_i) replay script + the observation
+    # trajectory (re-used by the diff_bounds boundary cotangents).
+    return out, (params, res.ts, res.hs, res.n_accepted, res.state_traj,
+                 res.traj, ts)
 
 
 def _aca_grid_bwd(cfg, res, g):
     g_traj = g[0]  # RunStats cotangents (g[1]) are zero/float0 — ignored.
-    params, seg_ts, seg_hs, seg_acc, seg_ckpts, ts = res
+    params, seg_ts, seg_hs, seg_acc, seg_ckpts, z_traj, ts = res
     tableau = cfg.solver.tableau
 
     def step_body(carry, t, h, z_i):
@@ -100,6 +103,10 @@ def _aca_grid_bwd(cfg, res, g):
               tree_zeros_like(params))
     a_z, g_params = reverse_segment_sweep(
         seg, carry0, g_traj, (seg_ts, seg_hs, seg_acc, seg_ckpts))
+    if cfg.diff_bounds:
+        a_t0 = tree_sub(a_z, _tm(lambda b: b[0], g_traj))
+        g_ts = bounds_cotangents(cfg.f, params, z_traj, ts, g_traj, a_t0)
+        return g_params, a_z, g_ts
     return g_params, a_z, jnp.zeros_like(ts)
 
 
@@ -132,8 +139,9 @@ class ACA(GradientMethod):
                 f"the ALF solver (got {getattr(solver, 'name', solver)!r})")
         super().validate(solver, controller)
 
-    def integrate(self, f, params, z0, ts, solver, controller):
-        cfg = AcaConfig(f, solver, controller)
+    def integrate(self, f, params, z0, ts, solver, controller,
+                  diff_bounds: bool = False):
+        cfg = AcaConfig(f, solver, controller, diff_bounds)
         traj, stats = _aca_grid(cfg, params, z0, ts)
         return traj, stats
 

@@ -29,12 +29,12 @@ import jax.numpy as jnp
 
 from jax import lax
 
-from .alf import tree_add, tree_zeros_like
+from .alf import tree_add, tree_sub, tree_zeros_like
 from .integrate import (as_time_grid, integrate_span, prepend_row,
                         reverse_segment_sweep, scalar_time_grid,
                         segment_pairs)
-from .interface import (GradientMethod, RunStats, make_run_stats,
-                        state_nbytes)
+from .interface import (GradientMethod, RunStats, bounds_cotangents,
+                        make_run_stats, state_nbytes)
 from .solvers import ALF, Dopri5, Solver, get_solver
 from .stepsize import StepController, controller_from_kwargs
 
@@ -49,6 +49,7 @@ class AdjointConfig(NamedTuple):
     f: Dynamics
     solver: Solver
     controller: StepController
+    diff_bounds: bool = False  # emit analytic dL/dts boundary cotangents
 
 
 def _integrate(cfg: AdjointConfig, dyn: Dynamics, params: Pytree,
@@ -111,6 +112,10 @@ def _adjoint_grid_bwd(cfg, res, g):
               tree_zeros_like(params))
     a_z, g_params = reverse_segment_sweep(
         seg, carry0, g_traj, (_tm(lambda b: b[1:], z_traj), ts[:-1], ts[1:]))
+    if cfg.diff_bounds:
+        a_t0 = tree_sub(a_z, _tm(lambda b: b[0], g_traj))
+        g_ts = bounds_cotangents(cfg.f, params, z_traj, ts, g_traj, a_t0)
+        return g_params, a_z, g_ts
     return g_params, a_z, jnp.zeros_like(ts)
 
 
@@ -139,8 +144,9 @@ class Backsolve(GradientMethod):
     def default_solver(self) -> Solver:
         return Dopri5()
 
-    def integrate(self, f, params, z0, ts, solver, controller):
-        cfg = AdjointConfig(f, solver, controller)
+    def integrate(self, f, params, z0, ts, solver, controller,
+                  diff_bounds: bool = False):
+        cfg = AdjointConfig(f, solver, controller, diff_bounds)
         traj, stats = _adjoint_grid(cfg, params, z0, ts)
         return traj, stats
 

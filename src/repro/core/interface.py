@@ -422,6 +422,49 @@ def batch_size(z0: Pytree) -> int:
     return next(iter(sizes.values()))
 
 
+_tm = jax.tree_util.tree_map
+
+
+def tree_vdot(a: Pytree, b: Pytree) -> jax.Array:
+    """Scalar inner product over matching pytrees (the adjoint-state dot
+    products the boundary cotangents are built from)."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    acc = jnp.vdot(leaves_a[0], leaves_b[0])
+    for x, y in zip(leaves_a[1:], leaves_b[1:]):
+        acc = acc + jnp.vdot(x, y)
+    return acc
+
+
+def bounds_cotangents(f, params: Pytree, z_traj: Pytree, ts: jax.Array,
+                      g_traj: Pytree, a_t0: Pytree) -> jax.Array:
+    """The analytic observation-time cotangents of an ODE solve
+    (``solve(..., diff_bounds=True)``; torchdiffeq/diffrax convention).
+
+    The continuous solution ``z(t_k)`` depends on an *interior or end*
+    observation time only through where it is sampled, and on the span
+    start ``t0`` only through the initial condition ``z(t0) = z0``::
+
+        dL/dt_k = +<g_k, f(z_k, t_k)>          k = 1 .. T-1
+        dL/dt_0 = -<a(t0), f(z0, t0)>
+
+    where ``a(t0)`` is the swept adjoint state at ``t0`` — the method's
+    total ``dL/dz0`` minus the ``traj[0] == z0`` identity-row cotangent
+    ``g_0`` (``traj[0]`` is the raw input, not a function of ``t0``).
+    Every gradient method's backward already holds ``z_traj``/``a(t0)``,
+    so the boundary terms cost one batched ``f`` sweep over the T-1
+    observation states plus one ``f(z0, t0)`` evaluation.
+    """
+    z0 = _tm(lambda b: b[0], z_traj)
+    tail_z = _tm(lambda b: b[1:], z_traj)
+    tail_g = _tm(lambda b: b[1:], g_traj)
+    f_rows = jax.vmap(lambda z, t: f(params, z, t))(tail_z, ts[1:])
+    g_tail = jax.vmap(tree_vdot)(tail_g, f_rows)
+    g_t0 = -tree_vdot(a_t0, f(params, z0, ts[0]))
+    return jnp.concatenate([jnp.reshape(g_t0, (1,)),
+                            g_tail]).astype(ts.dtype)
+
+
 class GradientMethod:
     """Base of the gradient-estimation axis (paper Table 1 rows).
 
@@ -432,10 +475,12 @@ class GradientMethod:
       ACA -> Heun-Euler, Backsolve -> Dopri5);
     * ``validate(solver, controller)`` — reject incompatible axes with an
       actionable error *before* tracing;
-    * ``integrate(f, params, z0, ts, solver, controller)`` — run the
-      observation-grid forward and return ``(traj, RunStats)`` where
-      ``traj`` has leading axis T = len(ts). custom_vjp methods own their
-      VJP wiring here;
+    * ``integrate(f, params, z0, ts, solver, controller, diff_bounds)`` —
+      run the observation-grid forward and return ``(traj, RunStats)``
+      where ``traj`` has leading axis T = len(ts). custom_vjp methods own
+      their VJP wiring here. With ``diff_bounds=True`` the backward emits
+      the analytic :func:`bounds_cotangents` for ``ts`` (zeros otherwise —
+      the pre-FFJORD static-bounds behavior);
     * ``residual_bytes(z0, n_obs, solver, controller)`` — the analytic
       backward-residual footprint for ``Stats``.
     """
@@ -452,11 +497,14 @@ class GradientMethod:
                 "use ConstantSteps(n) with it or pick an embedded pair")
 
     def integrate(self, f, params, z0: Pytree, ts: jax.Array, solver,
-                  controller) -> Tuple[Pytree, RunStats]:
+                  controller,
+                  diff_bounds: bool = False) -> Tuple[Pytree, RunStats]:
         raise NotImplementedError
 
     def integrate_batched(self, f, params, z0: Pytree, ts: jax.Array,
-                          solver, controller) -> Tuple[Pytree, RunStats]:
+                          solver, controller,
+                          diff_bounds: bool = False) -> Tuple[Pytree,
+                                                              RunStats]:
         """PerSample driver: vmap the per-trajectory masked-scan driver
         over the leading batch axis of ``z0``. Under vmap the scan carry
         — ``(state, t, h, done)`` and the recorded ``(t_i, h_i)`` replay
@@ -464,9 +512,11 @@ class GradientMethod:
         finished samples ride along as no-ops, and this method's
         custom_vjp backward replays each row's own step script. Returns
         ``(traj, RunStats)`` with leading axis B (traj: ``(B, T, ...)``,
-        counters: ``(B,)``)."""
+        counters: ``(B,)``). ``ts`` rides as a closed-over constant, so
+        with ``diff_bounds=True`` its cotangent sums over the batch rows."""
         return jax.vmap(
-            lambda z: self.integrate(f, params, z, ts, solver, controller)
+            lambda z: self.integrate(f, params, z, ts, solver, controller,
+                                     diff_bounds)
         )(z0)
 
     def residual_bytes(self, z0: Pytree, n_obs: int, solver,

@@ -23,8 +23,12 @@ The trajectory cotangent g[k] is injected into a(t) as the sweep crosses
 observation k. The stepsize *search* (rejected trials) is excluded, so the
 effective computation-graph depth is N_f x N_t (Table 1, MALI column).
 
-Gradients w.r.t. the observation times are not propagated (zeros); the
-framework never differentiates them. The forward also emits
+Gradients w.r.t. the observation times are zeros by default; with
+``MaliConfig(diff_bounds=True)`` (the ``solve(..., diff_bounds=True)``
+surface) the backward emits the analytic boundary cotangents
+``dL/dt_k = <g_k, f(z_k, t_k)>`` / ``dL/dt_0 = -<a(t0), f(z0, t0)>``
+from state already in the replay buffer — the FFJORD trainable-end-time
+hook. The forward also emits
 :class:`~repro.core.interface.RunStats` integer counters (the
 ``Solution.stats`` feed); their cotangents are ignored.
 
@@ -43,10 +47,11 @@ import jax
 import jax.numpy as jnp
 
 from .alf import (alf_inverse, alf_step, alf_step_with_error, check_eta,
-                  init_velocity, tree_add, tree_zeros_like)
+                  init_velocity, tree_add, tree_sub, tree_zeros_like)
 from .integrate import (as_time_grid, integrate_grid, reverse_masked_scan,
                         reverse_segment_sweep, scalar_time_grid)
-from .interface import GradientMethod, RunStats, make_run_stats, state_nbytes
+from .interface import (GradientMethod, RunStats, bounds_cotangents,
+                        make_run_stats, state_nbytes)
 from .solvers import ALF
 from .stepsize import (AdaptiveController, StepController,
                        controller_from_kwargs)
@@ -64,6 +69,7 @@ class MaliConfig(NamedTuple):
     controller: StepController
     fused_bwd: bool = True  # share the inverse's f-eval with the local VJP
     backend: str = "reference"  # forward step algebra: jnp or fused Pallas
+    diff_bounds: bool = False  # emit analytic dL/dts boundary cotangents
 
 
 def _traj_row(traj: Pytree, k: int) -> Pytree:
@@ -248,6 +254,12 @@ def _mali_grid_bwd(cfg, res, g):
     a_z, a_v, g_params = reverse_segment_sweep(seg, carry0, g_traj, extras)
 
     g_params, a_z = _close_v0_vjp(cfg.f, params, z0, ts[0], a_z, a_v, g_params)
+    if cfg.diff_bounds:
+        # a(t0) is the flow-swept adjoint: total dL/dz0 minus the
+        # traj[0] == z0 identity-row cotangent.
+        a_t0 = tree_sub(a_z, _traj_row(g_traj, 0))
+        g_ts = bounds_cotangents(cfg.f, params, z_traj, ts, g_traj, a_t0)
+        return g_params, a_z, g_ts
     return g_params, a_z, jnp.zeros_like(ts)
 
 
@@ -286,9 +298,10 @@ class MALI(GradientMethod):
                 "solver=ALF(eta=...) or use gradient=Naive()/ACA() for "
                 "Runge-Kutta solvers.")
 
-    def integrate(self, f, params, z0, ts, solver, controller):
+    def integrate(self, f, params, z0, ts, solver, controller,
+                  diff_bounds: bool = False):
         cfg = MaliConfig(f, solver.eta, controller, self.fused_bwd,
-                         solver.backend)
+                         solver.backend, diff_bounds)
         traj, stats = _mali_grid(cfg, params, z0, ts)
         return traj, stats
 

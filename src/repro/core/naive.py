@@ -16,19 +16,84 @@ for the end state and for every point of an observation-grid trajectory.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import functools
+from typing import Any, Callable, NamedTuple
 
 import jax
 
+from jax import lax
+
+from .alf import tree_sub
 from .integrate import as_time_grid, integrate_grid, scalar_time_grid
-from .interface import GradientMethod, make_run_stats, state_nbytes
+from .interface import (GradientMethod, bounds_cotangents, make_run_stats,
+                        state_nbytes)
 from .solvers import ALF, Solver, get_solver
-from .stepsize import controller_from_kwargs
+from .stepsize import StepController, controller_from_kwargs
 
 _tm = jax.tree_util.tree_map
 
 Pytree = Any
 Dynamics = Callable[[Pytree, Pytree, jax.Array], Pytree]
+
+
+class NaiveConfig(NamedTuple):
+    """Static (hashable) configuration of the diff-bounds custom_vjp."""
+    f: Dynamics
+    solver: Solver
+    controller: StepController
+
+
+def _naive_run(cfg: NaiveConfig, params, z0, ts):
+    """The plain differentiable grid integration Naive() backpropagates
+    through. Module-level so the diff_bounds wrapper below can re-trace it
+    inside its backward."""
+    state0 = cfg.solver.init_state(cfg.f, params, z0, ts[0])
+    trial = cfg.solver.trial_fn(cfg.f, params, cfg.controller)
+    res = integrate_grid(trial, state0, ts, controller=cfg.controller,
+                         order=cfg.solver.order)
+    init_evals = 1 if isinstance(cfg.solver, ALF) else 0
+    return (cfg.solver.output(res.traj),
+            make_run_stats(res.n_accepted, res.n_trials, cfg.solver.stages,
+                           init_evals))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _naive_grid_db(cfg: NaiveConfig, params: Pytree, z0: Pytree,
+                   ts: jax.Array):
+    """Naive integration with analytic observation-time cotangents.
+
+    Direct backprop through the step loop would yield the *discrete*
+    dL/dts (the derivative of the step-size arithmetic), which differs
+    from the continuous boundary terms by the solver's truncation error.
+    This wrapper keeps the params/z0 path as ordinary AD (one extra
+    forward re-trace in the backward) and substitutes the analytic
+    :func:`~repro.core.interface.bounds_cotangents` for ``ts`` — so all
+    four gradient methods agree on the diff_bounds semantics.
+    """
+    return _naive_run(cfg, params, z0, ts)
+
+
+def _naive_grid_db_fwd(cfg, params, z0, ts):
+    out = _naive_run(cfg, params, z0, ts)
+    return out, (params, z0, ts, out[0])
+
+
+def _naive_grid_db_bwd(cfg, res, g):
+    g_traj = g[0]  # RunStats cotangents (g[1]) are zero/float0 — ignored.
+    params, z0, ts, z_traj = res
+
+    def run_traj(p, z):
+        traj, _ = _naive_run(cfg, p, z, lax.stop_gradient(ts))
+        return traj
+
+    _, vjp_fn = jax.vjp(run_traj, params, z0)
+    g_params, g_z0 = vjp_fn(g_traj)
+    a_t0 = tree_sub(g_z0, _tm(lambda b: b[0], g_traj))
+    g_ts = bounds_cotangents(cfg.f, params, z_traj, ts, g_traj, a_t0)
+    return g_params, g_z0, g_ts
+
+
+_naive_grid_db.defvjp(_naive_grid_db_fwd, _naive_grid_db_bwd)
 
 
 def check_direct_backprop(solver: Solver, consumer: str) -> None:
@@ -72,15 +137,12 @@ class Naive(GradientMethod):
         super().validate(solver, controller)
         check_direct_backprop(solver, "Naive()")
 
-    def integrate(self, f, params, z0, ts, solver, controller):
-        state0 = solver.init_state(f, params, z0, ts[0])
-        trial = solver.trial_fn(f, params, controller)
-        res = integrate_grid(trial, state0, ts, controller=controller,
-                             order=solver.order)
-        init_evals = 1 if isinstance(solver, ALF) else 0
-        return (solver.output(res.traj),
-                make_run_stats(res.n_accepted, res.n_trials, solver.stages,
-                               init_evals))
+    def integrate(self, f, params, z0, ts, solver, controller,
+                  diff_bounds: bool = False):
+        cfg = NaiveConfig(f, solver, controller)
+        if diff_bounds:
+            return _naive_grid_db(cfg, params, z0, ts)
+        return _naive_run(cfg, params, z0, ts)
 
     def residual_bytes(self, z0, n_obs, solver, controller) -> int:
         # AD keeps every trial step's stage intermediates alive — grows with

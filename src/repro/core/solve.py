@@ -60,7 +60,7 @@ from .integrate import (as_time_grid, integrate_grid, scalar_time_grid,
                         validate_span)
 from .interface import (Batching, Event, GradientMethod, Lockstep, PerSample,
                         RunStats, SaveAt, Sharded, Solution, Stats,
-                        batch_size, make_run_stats, state_nbytes)
+                        batch_size, make_run_stats, state_nbytes, tree_vdot)
 from .mali import MALI
 from .naive import Naive, check_direct_backprop as _check_direct_backprop
 from .solvers import ALF, Solver, get_solver
@@ -162,15 +162,43 @@ def _solve_dense_interp(f, params, z0, t0, t1, solver, controller,
                     interpolation=interp)
 
 
+def _ift_event_time(f, params, event: Event, z_ev, t_event, fired):
+    """Differentiable event time via the implicit function theorem.
+
+    ``locate_event`` runs on a stop-gradient detection pass, so the raw
+    ``t_event`` carries no cotangents. The crossing is defined implicitly
+    by ``c(z(t*; theta), t*) = 0``, giving
+
+        dt*/dtheta = -<c_z, dz(t*)/dtheta> / (<c_z, f(z*, t*)> + c_t).
+
+    Re-expressed as a value-preserving correction (the torchdiffeq/diffrax
+    trick): ``t* - (c(z_ev, t*) - sg(c)) / sg(cdot)`` — the subtraction is
+    identically zero in the primal, and its pullback routes the re-solve's
+    differentiable ``z_ev`` into exactly the IFT quotient. ``fired`` gates
+    the correction so an event-free span keeps a plain (zero-gradient)
+    span endpoint."""
+    t_arr = jnp.asarray(t_event)
+    cval = jnp.asarray(event.cond_fn(z_ev, t_arr))
+    z_sg = lax.stop_gradient(z_ev)
+    _, vjp_c = jax.vjp(lambda z, t: jnp.asarray(event.cond_fn(z, t)),
+                       z_sg, t_arr)
+    c_z, c_t = vjp_c(jnp.ones_like(cval))
+    cdot = tree_vdot(c_z, f(lax.stop_gradient(params), z_sg, t_arr)) + c_t
+    safe = jnp.where(jnp.abs(cdot) > 1e-12, cdot, jnp.ones_like(cdot))
+    corr = (cval - lax.stop_gradient(cval)) / lax.stop_gradient(safe)
+    return t_arr - jnp.where(fired, corr, jnp.zeros_like(corr))
+
+
 def _solve_event(f, params, z0, t0, t1, solver, controller, gradient,
-                 saveat, event: Event) -> Solution:
+                 saveat, event: Event, diff_bounds: bool) -> Solution:
     """Terminating-event solve: dense-record the full span on frozen
     (stop-gradient) inputs, locate/refine the first crossing of
     ``event.cond_fn`` on the interpolant, then re-solve ``[t0, t_event]``
     with the chosen gradient method — the frozen-``t_event`` gradient path
     every method supports (``t_event`` is a constant of the re-solve, so
     MALI replays/reconstructs, ACA checkpoints and Backsolve re-integrates
-    exactly as in a plain solve)."""
+    exactly as in a plain solve). ``Stats.event_time`` is made
+    differentiable afterwards via :func:`_ift_event_time`."""
     if saveat.steps or saveat.dense:
         raise ValueError(
             "SaveAt(steps=True)/SaveAt(dense=True) with event= is not "
@@ -202,13 +230,16 @@ def _solve_event(f, params, z0, t0, t1, solver, controller, gradient,
         clamped = jnp.where(forward, jnp.minimum(user_grid, t_event),
                             jnp.maximum(user_grid, t_event))
         traj, rstats = gradient.integrate(f, params, z0, clamped, solver,
-                                          controller)
+                                          controller, diff_bounds)
         ys, ts_out, grid_out = traj, clamped, clamped
+        z_ev = _tm(lambda b: b[-1], traj)
     else:
         grid_out = jnp.stack([grid[0], jnp.asarray(t_event, grid.dtype)])
         traj, rstats = gradient.integrate(f, params, z0, grid_out, solver,
-                                          controller)
+                                          controller, diff_bounds)
         ys, ts_out = _tm(lambda b: b[-1], traj), grid_out[-1]
+        z_ev = ys
+    t_event = _ift_event_time(f, params, event, z_ev, t_event, fired)
 
     # Total accounting = re-solve + detection pass. The re-solve counters
     # come out of a custom_vjp primal — detach before arithmetic (their
@@ -275,23 +306,23 @@ def _batch_first(traj: Pytree) -> Pytree:
 
 
 def _solve_lockstep(f, params, z0, grid, nb, solver, controller, gradient,
-                    trajectory):
+                    trajectory, diff_bounds=False):
     """One shared controller decision per trial: integrate the batch as a
     single concatenated system (the unbatched machinery on the batched
     state — exactly the implicit pre-Batching semantics, made explicit)."""
     traj, rstats = gradient.integrate(f, params, z0, grid, solver,
-                                      controller)
+                                      controller, diff_bounds)
     per = _broadcast_rows(rstats, nb)
     ys = _batch_first(traj) if trajectory else _tm(lambda b: b[-1], traj)
     return ys, per
 
 
 def _solve_per_sample(f, params, z0, grid, solver, controller, gradient,
-                      trajectory):
+                      trajectory, diff_bounds=False):
     """Row-independent adaptive control via the vmapped masked-scan driver
     (each sample carries its own (t, h, done); see integrate.py)."""
     traj, per = gradient.integrate_batched(f, params, z0, grid, solver,
-                                           controller)
+                                           controller, diff_bounds)
     ys = traj if trajectory else _tm(lambda b: b[:, -1], traj)
     return ys, _detached(per)
 
@@ -341,7 +372,8 @@ def _solve_sharded(f, params, z0, grid, nb, solver, controller, gradient,
 
 
 def _solve_batched(f, params, z0, t0, t1, solver, controller, gradient,
-                   saveat, batching: Batching) -> Solution:
+                   saveat, batching: Batching,
+                   diff_bounds: bool = False) -> Solution:
     nb = batch_size(z0)
 
     if saveat.steps or saveat.dense:
@@ -381,10 +413,11 @@ def _solve_batched(f, params, z0, t0, t1, solver, controller, gradient,
                                  gradient, trajectory, batching)
     elif isinstance(batching, PerSample):
         ys, per = _solve_per_sample(f, params, z0, grid, solver, controller,
-                                    gradient, trajectory)
+                                    gradient, trajectory, diff_bounds)
     else:
         ys, per = _solve_lockstep(f, params, z0, grid, nb, solver,
-                                  controller, gradient, trajectory)
+                                  controller, gradient, trajectory,
+                                  diff_bounds)
 
     stats = _batched_stats(per, gradient, z0, grid, solver, controller)
     ts_out = grid if trajectory else grid[-1]
@@ -397,7 +430,8 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
           gradient: Optional[GradientMethod] = None,
           saveat: Optional[SaveAt] = None,
           batching: Optional[Batching] = None,
-          event: Optional[Event] = None) -> Solution:
+          event: Optional[Event] = None,
+          diff_bounds: bool = False) -> Solution:
     """Integrate ``dz/dt = f(params, z, t)`` and return a :class:`Solution`.
 
     Time is a first-class axis: ``t1 < t0`` (or a descending ``SaveAt.ts``
@@ -438,6 +472,16 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
       across modes, and ``stats`` gains per-sample rows (see
       :class:`Stats`). ``None`` (default) keeps the single-trajectory
       semantics untouched.
+    * ``diff_bounds`` — make the integration bounds differentiable: the
+      chosen gradient method emits the analytic boundary cotangents
+      ``dL/dt_k = <g_k, f(z_k, t_k)>`` (k >= 1) and
+      ``dL/dt_0 = -<a(t0), f(z0, t0)>`` for ``t0``/``t1`` (and every
+      ``SaveAt.ts`` entry) instead of zeros — the hook FFJORD-style
+      trainable end-times (``repro.cnf``) need. Costs one extra batched
+      f-sweep over the observation states in the backward. Not available
+      with ``SaveAt(steps=True)``/``SaveAt(dense=True)`` (per-step output
+      has no fixed observation grid) or ``Sharded`` batching (the grid is
+      a closed-over constant inside shard_map).
 
     The returned :class:`Solution` is a pytree (jit/vmap/grad-safe);
     differentiate any loss of ``sol.ys`` and the chosen gradient method's
@@ -461,6 +505,21 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
     if saveat.ts is None:
         validate_span(t0, t1)
 
+    if diff_bounds:
+        if saveat.steps or saveat.dense:
+            raise ValueError(
+                "diff_bounds=True needs a fixed observation grid; "
+                "SaveAt(steps=True)/SaveAt(dense=True) output is indexed by "
+                "accepted steps, which carry no boundary cotangents — use "
+                "the default end state or SaveAt(ts=grid)")
+        if isinstance(batching, Sharded):
+            raise ValueError(
+                "diff_bounds=True with Sharded() batching is not supported: "
+                "the observation grid is a closed-over constant inside "
+                "shard_map, so its cotangents cannot cross the mesh axis — "
+                "use Lockstep()/PerSample(), or vmap sharded solves with "
+                "static bounds")
+
     if event is not None:
         if not isinstance(event, Event):
             raise TypeError(f"event must be an Event, got {event!r}")
@@ -470,7 +529,7 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
                 "times are ragged; vmap single event solves, or solve the "
                 "batch without an event and post-process")
         return _solve_event(f, params, z0, t0, t1, solver, controller,
-                            gradient, saveat, event)
+                            gradient, saveat, event, diff_bounds)
 
     if batching is not None:
         if not isinstance(batching, Batching):
@@ -479,7 +538,7 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
                 f"Sharded), got {batching!r}")
         batching.validate(controller, saveat)
         return _solve_batched(f, params, z0, t0, t1, solver, controller,
-                              gradient, saveat, batching)
+                              gradient, saveat, batching, diff_bounds)
 
     if saveat.steps:
         return _solve_dense(f, params, z0, t0, t1, solver, controller,
@@ -490,7 +549,8 @@ def solve(f: Dynamics, params: Pytree, z0: Pytree, t0=0.0, t1=1.0, *,
 
     trajectory = saveat.ts is not None
     grid = as_time_grid(saveat.ts) if trajectory else scalar_time_grid(t0, t1)
-    traj, rstats = gradient.integrate(f, params, z0, grid, solver, controller)
+    traj, rstats = gradient.integrate(f, params, z0, grid, solver, controller,
+                                      diff_bounds)
     stats = _build_stats(rstats, gradient, z0, grid, solver, controller)
     if trajectory:
         return Solution(ys=traj, ts=grid, stats=stats)

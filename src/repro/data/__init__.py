@@ -1,3 +1,4 @@
-from .synthetic import DataConfig, SyntheticStream, make_batch
+from .synthetic import (DataConfig, SyntheticStream, make_batch,
+                        make_image_batch)
 
-__all__ = ["DataConfig", "SyntheticStream", "make_batch"]
+__all__ = ["DataConfig", "SyntheticStream", "make_batch", "make_image_batch"]

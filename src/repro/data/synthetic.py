@@ -51,6 +51,37 @@ def make_batch(cfg: ModelConfig, dcfg: DataConfig, step: int,
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
+def make_image_batch(dcfg: DataConfig, step: int, shard: int = 0,
+                     n_shards: int = 1,
+                     shape: tuple = (28, 28, 1)) -> Dict[str, np.ndarray]:
+    """One shard of one step's MNIST-shaped image batch (the repro.cnf
+    pipeline's data feed), as host numpy.
+
+    Same determinism contract as :func:`make_batch`: a pure function of
+    (seed, step, shard), so any host can regenerate any shard. Images are
+    smooth multi-blob intensity fields quantized to 256 levels in [0, 1)
+    — structured enough that a flow beats the raw-Gaussian baseline,
+    with a quantization grid that makes dequantized bits/dim meaningful.
+    Returned flattened: ``{"image": (b, H*W*C) float32}``.
+    """
+    assert dcfg.global_batch % n_shards == 0
+    b = dcfg.global_batch // n_shards
+    rng = _shard_key(dcfg.seed, step, shard)
+    h, w, c = shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    centers = rng.uniform(0, [h, w], (b, 3, 2)).astype(np.float32)
+    widths = rng.uniform(h / 10, h / 4, (b, 3)).astype(np.float32)
+    img = np.zeros((b, h, w), np.float32)
+    for k in range(3):
+        d2 = ((yy[None] - centers[:, k, 0, None, None]) ** 2
+              + (xx[None] - centers[:, k, 1, None, None]) ** 2)
+        img += np.exp(-d2 / (2 * widths[:, k, None, None] ** 2))
+    img /= img.max(axis=(1, 2), keepdims=True).clip(1e-6)
+    img = np.floor(img * 255.0) / 256.0  # 256-level quantization grid
+    img = np.repeat(img[..., None], c, axis=-1)
+    return {"image": img.reshape(b, h * w * c).astype(np.float32)}
+
+
 class SyntheticStream:
     """Iterator over global batches placed with an optional NamedSharding."""
 

@@ -1,8 +1,10 @@
-"""Model substrate: attention/MoE/SSM/xLSTM blocks + continuous-depth LM."""
+"""Model substrate: attention/MoE/SSM/xLSTM blocks + continuous-depth LM
++ flow vector fields."""
 from .lm import (ServeState, decode_step, init_lm, init_serve_state, lm_loss,
                  lm_loss_and_stats, prefill)
 from .transformer import init_blocks, init_cache, n_cache_slots
+from .vfield import init_mlp_vfield, mlp_vfield
 
 __all__ = ["init_lm", "lm_loss", "lm_loss_and_stats", "prefill",
            "decode_step", "init_serve_state", "ServeState", "init_blocks",
-           "init_cache", "n_cache_slots"]
+           "init_cache", "n_cache_slots", "init_mlp_vfield", "mlp_vfield"]

@@ -1,0 +1,44 @@
+"""Concat-time MLP vector fields for continuous flows (repro.cnf).
+
+The canonical FFJORD field shape: ``f([z, t]) -> dz/dt`` through a tanh
+MLP. Operates on a SINGLE state of shape (..., dim) — batch axes broadcast
+through the matmuls, and the CNF wrapper vmaps per-sample where the trace
+estimator needs a per-state linearization.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def init_mlp_vfield(key: jax.Array, dim: int, hidden: int = 64,
+                    depth: int = 2, scale: float = 0.5) -> Dict[str, Any]:
+    """Parameters of a concat-time tanh MLP field: (dim+1) -> hidden^depth
+    -> dim. The output layer is zero-initialized so the flow starts at the
+    identity map (logdet 0 — the stable CNF init)."""
+    widths = [dim + 1] + [hidden] * depth + [dim]
+    keys = jax.random.split(key, len(widths) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        fan_in, fan_out = widths[i], widths[i + 1]
+        last = i == len(keys) - 1
+        w = (jnp.zeros((fan_in, fan_out)) if last
+             else scale * jax.random.normal(k, (fan_in, fan_out))
+             / jnp.sqrt(fan_in))
+        layers.append({"w": w, "b": jnp.zeros((fan_out,))})
+    return {"layers": layers}
+
+
+def mlp_vfield(params: Pytree, z: jax.Array, t: jax.Array) -> jax.Array:
+    """f(params, z, t) -> dz/dt for z of shape (..., dim); time enters as
+    an extra input column (broadcast over batch axes)."""
+    t_col = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    h = jnp.concatenate([z, t_col], -1)
+    layers = params["layers"]
+    for layer in layers[:-1]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    return h @ layers[-1]["w"] + layers[-1]["b"]

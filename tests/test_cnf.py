@@ -1,0 +1,249 @@
+"""repro.cnf: trace estimators, flow densities, losses.
+
+Contracts under test:
+
+* estimator algebra — :class:`Exact` recovers the true Jacobian trace;
+  :class:`Hutchinson` is exact for linear fields with Rademacher probes
+  (``eps^T A eps = tr(A) + sum_{i!=j} A_ij eps_i eps_j`` and sign probes
+  square to one), unbiased in expectation for the ``hutchinson_gaussian``
+  registry entry, and refuses to run without a probe key;
+* fixed-noise-per-solve — the probe rides in the solve carry, so the same
+  key gives a BIT-EQUAL logdet under adaptive stepping (accept/reject
+  re-evaluations see the same noise) and different keys differ;
+* analytic density — for the linear field ``f = a*z`` the flow is
+  ``z(t1) = x e^{a t1}`` with ``logdet = d*a*t1``, so ``log_prob`` is
+  checkable in closed form, for every gradient method;
+* sampling is the reverse-time solve of the same augmented dynamics
+  (round-trips through ``log_prob``), and the losses implement the
+  standard bits/dim bookkeeping.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnf import (CNF, Exact, Hutchinson, TRACE_ESTIMATORS,
+                       bits_per_dim, cnf_loss, get_estimator, nll_nats)
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, HeunEuler, Dopri5, MALI, Naive,
+                        PerSample, SaveAt)
+from repro.models import init_mlp_vfield, mlp_vfield
+
+jax.config.update("jax_platform_name", "cpu")
+
+D = 4
+KEY = jax.random.PRNGKey(0)
+
+CONFIGS = {
+    "mali": (MALI(), ALF()),
+    "naive": (Naive(), ALF()),
+    "aca": (ACA(), HeunEuler()),
+    "adjoint": (Backsolve(), Dopri5()),
+}
+
+
+def _linear_field(params, z, t):
+    return params["a"] * z
+
+
+def _mlp_params(scale=0.3):
+    # init_mlp_vfield zero-inits the output layer (identity flow), so
+    # perturb every leaf to get a nontrivial Jacobian trace
+    fp = init_mlp_vfield(jax.random.PRNGKey(3), D, hidden=16)
+    return jax.tree_util.tree_map(
+        lambda a: a + scale * jax.random.normal(jax.random.PRNGKey(9),
+                                                a.shape), fp)
+
+
+# ---------------------------------------------------------------------------
+# Estimators
+# ---------------------------------------------------------------------------
+
+def test_exact_trace_recovers_jacobian_trace():
+    a = jax.random.normal(jax.random.PRNGKey(1), (D, D))
+
+    def f(z):
+        return z @ a.T
+
+    z = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    fz, tr = Exact().value_and_trace(f, z, None)
+    np.testing.assert_allclose(np.asarray(fz), np.asarray(f(z)), rtol=1e-6)
+    np.testing.assert_allclose(float(tr), float(jnp.trace(a)), rtol=1e-5)
+
+
+def test_hutchinson_rademacher_exact_on_diagonal_field():
+    # sign probes square to one: eps^T diag(d) eps == tr for ANY eps
+    diag = jnp.array([0.5, -1.0, 2.0, 0.25])
+
+    def f(z):
+        return diag * z
+
+    z = jnp.ones((D,))
+    eps = Hutchinson().init_noise(KEY, z)
+    _, tr = Hutchinson().value_and_trace(f, z, eps)
+    np.testing.assert_allclose(float(tr), float(jnp.sum(diag)), rtol=1e-6)
+
+
+def test_hutchinson_gaussian_unbiased():
+    a = jax.random.normal(jax.random.PRNGKey(4), (D, D))
+
+    def f(z):
+        return z @ a.T
+
+    est = get_estimator("hutchinson_gaussian")
+    z = jnp.zeros((D,))
+    keys = jax.random.split(KEY, 4096)
+    trs = jax.vmap(
+        lambda k: est.value_and_trace(f, z, est.init_noise(k, z))[1])(keys)
+    np.testing.assert_allclose(float(trs.mean()), float(jnp.trace(a)),
+                               atol=0.25)
+
+
+def test_hutchinson_requires_key():
+    with pytest.raises(ValueError, match="probe per solve"):
+        Hutchinson().init_noise(None, jnp.zeros((D,)))
+    with pytest.raises(ValueError, match="rademacher"):
+        Hutchinson(dist="sobol")
+
+
+def test_estimator_registry():
+    assert set(TRACE_ESTIMATORS) == {"exact", "hutchinson",
+                                     "hutchinson_gaussian"}
+    assert isinstance(get_estimator("exact"), Exact)
+    assert get_estimator("hutchinson_gaussian").dist == "gaussian"
+    est = Hutchinson()
+    assert get_estimator(est) is est
+    with pytest.raises(ValueError, match="unknown trace estimator"):
+        get_estimator("cholesky")
+    # cost accounting: exact pays d f-eval-equivalents, hutchinson one
+    assert Exact().trace_fevals(D) == D
+    assert Hutchinson().trace_fevals(D) == 1
+
+
+# ---------------------------------------------------------------------------
+# Flow densities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_log_prob_matches_analytic_linear_flow(method):
+    gradient, solver = CONFIGS[method]
+    a = 0.4
+    flow = CNF(_linear_field, D, estimator=Exact())
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, D))
+    r = flow.log_prob({"a": jnp.float32(a)}, x, solver=solver,
+                      controller=ConstantSteps(64), gradient=gradient)
+    z_t1 = x * math.exp(a)
+    want_logdet = D * a
+    want_logp = (-0.5 * np.sum(np.asarray(z_t1) ** 2, -1)
+                 - 0.5 * D * math.log(2 * math.pi) + want_logdet)
+    np.testing.assert_allclose(np.asarray(r.logdet),
+                               np.full((6,), want_logdet), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r.logp), want_logp, rtol=1e-3)
+
+
+def test_identity_init_logdet_zero():
+    # zero-initialized output layer => f == 0 => the flow is the identity
+    # and log_prob is exactly the base density
+    fp = init_mlp_vfield(jax.random.PRNGKey(3), D, hidden=16)
+    flow = CNF(mlp_vfield, D, estimator=Exact())
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, D))
+    r = flow.log_prob(fp, x, controller=ConstantSteps(4))
+    np.testing.assert_allclose(np.asarray(r.logdet), 0.0, atol=1e-6)
+
+
+def test_fixed_noise_same_key_bit_equal_under_adaptive():
+    fp = _mlp_params()
+    flow = CNF(mlp_vfield, D, estimator=Hutchinson())
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, D))
+    r1 = flow.log_prob(fp, x, KEY, controller=AdaptiveController())
+    r2 = flow.log_prob(fp, x, KEY, controller=AdaptiveController())
+    # bit-equal, not allclose: the probe lives in the solve carry, so the
+    # estimate is a pure function of (params, x, key) under ANY schedule
+    assert jnp.array_equal(r1.logdet, r2.logdet)
+    assert jnp.array_equal(r1.logp, r2.logp)
+    r3 = flow.log_prob(fp, x, jax.random.PRNGKey(77),
+                       controller=AdaptiveController())
+    assert bool(jnp.any(r1.logdet != r3.logdet))
+
+
+def test_hutchinson_mean_approaches_exact():
+    fp = _mlp_params()
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, D))
+    exact = CNF(mlp_vfield, D, estimator=Exact()).log_prob(
+        fp, x, controller=ConstantSteps(8)).logdet
+    hflow = CNF(mlp_vfield, D, estimator=Hutchinson())
+    keys = jax.random.split(KEY, 64)
+    hs = jnp.stack([
+        hflow.log_prob(fp, x, k, controller=ConstantSteps(8)).logdet
+        for k in keys])
+    bias = float(jnp.abs(hs.mean(0) - exact).mean())
+    spread = float(hs.std(0).mean())
+    assert bias < 3.0 * spread / math.sqrt(64) + 5e-2, (bias, spread)
+
+
+def test_per_sample_batching_and_string_estimator():
+    fp = _mlp_params()
+    flow = CNF(mlp_vfield, D, estimator="hutchinson")
+    x = jax.random.normal(jax.random.PRNGKey(10), (6, D))
+    r = flow.log_prob(fp, x, KEY, batching=PerSample(),
+                      controller=AdaptiveController())
+    assert r.logp.shape == (6,)
+    assert np.all(np.isfinite(np.asarray(r.logp)))
+
+
+def test_diff_bounds_through_log_prob():
+    fp = _mlp_params()
+    flow = CNF(mlp_vfield, D, estimator=Hutchinson())
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, D))
+
+    def loss(t1):
+        r = flow.log_prob(fp, x, KEY, controller=ConstantSteps(8), t1=t1,
+                          diff_bounds=True)
+        return nll_nats(r)
+
+    g = jax.grad(loss)(jnp.float32(1.0))
+    assert np.isfinite(float(g)) and float(g) != 0.0
+
+
+# ---------------------------------------------------------------------------
+# Sampling & losses
+# ---------------------------------------------------------------------------
+
+def test_sample_shapes_and_flow_path():
+    fp = _mlp_params()
+    flow = CNF(mlp_vfield, D, estimator=Hutchinson())
+    sol = flow.sample(fp, KEY, 5, controller=ConstantSteps(4))
+    assert sol.ys[0].shape == (5, D)
+    path = flow.sample(fp, KEY, 5, controller=ConstantSteps(2),
+                       saveat=SaveAt(ts=jnp.linspace(1.0, 0.0, 3)))
+    assert path.ys[0].shape == (3, 5, D)
+
+
+def test_sample_log_prob_round_trip():
+    fp = _mlp_params(scale=0.1)
+    flow = CNF(mlp_vfield, D, estimator=Exact())
+    xs = flow.sample(fp, KEY, 16, controller=ConstantSteps(16)).ys[0]
+    r = flow.log_prob(fp, xs, controller=ConstantSteps(16))
+    assert np.all(np.isfinite(np.asarray(r.logp)))
+    # samples from the model should not be wildly improbable under it
+    assert float(r.logp.mean()) > -10.0 * D
+
+
+def test_losses_bookkeeping():
+    fp = _mlp_params()
+    flow = CNF(mlp_vfield, D, estimator=Exact())
+    x = jax.random.normal(jax.random.PRNGKey(12), (8, D))
+    r = flow.log_prob(fp, x, controller=ConstantSteps(4))
+    nll = float(nll_nats(r))
+    np.testing.assert_allclose(nll, -float(r.logp.mean()), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(bits_per_dim(r, D, n_bins=256)),
+        nll / (D * math.log(2.0)) + math.log2(256.0), rtol=1e-6)
+    assert float(cnf_loss(r, kinetic_reg=0.0)) == pytest.approx(nll)
+    assert float(cnf_loss(r, kinetic_reg=0.5)) > float(
+        cnf_loss(r, kinetic_reg=0.0))
+    assert float(r.kinetic.min()) >= 0.0

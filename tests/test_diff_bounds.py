@@ -1,0 +1,197 @@
+"""Differentiable integration bounds (``solve(..., diff_bounds=True)``).
+
+The contract under test (torchdiffeq/diffrax boundary-term convention):
+
+* ``dL/dt1 = <g_T, f(z_T, t1)>`` — the end-time gradient is the loss
+  cotangent at the terminal state contracted with the dynamics there;
+* ``dL/dt0 = -<a(t0), f(z0, t0)>`` where ``a(t0)`` is the swept adjoint
+  at the start — the TOTAL ``dL/dz0`` minus the identity-row cotangent of
+  the observed ``traj[0] == z0`` row (moving ``t0`` does not move the
+  observed initial row itself, only everything downstream of it);
+* interior observation times get ``dL/dt_k = <g_k, f(z_k, t_k)>``.
+
+All four gradient methods must agree on these *continuous* semantics —
+including Naive, whose direct AD through the step loop would otherwise
+produce the *discrete* derivative of the step-size arithmetic (that is
+why naive.py carries the ``_naive_grid_db`` custom_vjp). The analytic
+checks are exact self-consistency (<= 1e-6 rel); the finite-difference
+checks pin the convention to the true derivative at truncation-error
+tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACA, ALF, AdaptiveController, Backsolve,
+                        ConstantSteps, Dopri5, HeunEuler, MALI, Naive,
+                        SaveAt, solve)
+from repro.core.interface import Lockstep, Sharded
+
+jax.config.update("jax_platform_name", "cpu")
+
+CONFIGS = {
+    "mali": (MALI(), ALF()),
+    "naive": (Naive(), ALF()),
+    "aca": (ACA(), HeunEuler()),
+    "adjoint": (Backsolve(), Dopri5()),
+}
+
+CONTROLLERS = {
+    "fixed": ConstantSteps(16),
+    "adaptive": AdaptiveController(),
+}
+
+# both integration directions: reverse spans flip the grid ordering the
+# boundary terms must survive sign-agnostically
+SPANS = {"forward": (0.0, 1.0), "reverse": (1.0, 0.2)}
+
+
+def _f(params, z, t):
+    # non-autonomous: makes f(z, t0) != f(z, t1), so a sign error in
+    # either boundary term cannot cancel
+    return params["a"] * z * jnp.cos(t)
+
+
+PARAMS = {"a": jnp.asarray(0.8)}
+Z0 = jnp.array([1.0, -0.5, 0.3])
+
+
+@pytest.mark.parametrize("direction", sorted(SPANS))
+@pytest.mark.parametrize("ctrl_name", sorted(CONTROLLERS))
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_bound_gradients_match_analytic(method, ctrl_name, direction):
+    gradient, solver = CONFIGS[method]
+    controller = CONTROLLERS[ctrl_name]
+    t0, t1 = SPANS[direction]
+
+    def loss(a, b):
+        s = solve(_f, PARAMS, Z0, a, b, solver=solver,
+                  controller=controller, gradient=gradient,
+                  diff_bounds=True)
+        return jnp.sum(s.ys ** 2), s.ys
+
+    (_, z_end), (g_t0, g_t1) = jax.value_and_grad(
+        loss, argnums=(0, 1), has_aux=True)(t0, t1)
+
+    # end-state loss => the swept adjoint at t0 IS the total dL/dz0
+    # (the observed traj[0] row carries zero cotangent)
+    def loss_z0(z):
+        s = solve(_f, PARAMS, z, t0, t1, solver=solver,
+                  controller=controller, gradient=gradient)
+        return jnp.sum(s.ys ** 2)
+
+    g_z0 = jax.grad(loss_z0)(Z0)
+    want_t1 = jnp.vdot(2.0 * z_end, _f(PARAMS, z_end, t1))
+    want_t0 = -jnp.vdot(g_z0, _f(PARAMS, Z0, t0))
+    np.testing.assert_allclose(float(g_t1), float(want_t1), rtol=1e-6)
+    np.testing.assert_allclose(float(g_t0), float(want_t0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_bound_gradients_fd_parity(method):
+    # the analytic test above is self-consistency; this one pins the
+    # convention to the true derivative (central differences over a fine
+    # fixed grid — agreement is up to truncation error, hence 1e-2)
+    gradient, solver = CONFIGS[method]
+    controller = ConstantSteps(64)
+
+    def loss(t0, t1):
+        s = solve(_f, PARAMS, Z0, t0, t1, solver=solver,
+                  controller=controller, gradient=gradient,
+                  diff_bounds=True)
+        return float(jnp.sum(s.ys ** 2))
+
+    g_t0, g_t1 = jax.grad(
+        lambda a, b: jnp.sum(solve(
+            _f, PARAMS, Z0, a, b, solver=solver, controller=controller,
+            gradient=gradient, diff_bounds=True).ys ** 2),
+        argnums=(0, 1))(0.0, 1.0)
+    eps = 1e-3
+    fd_t1 = (loss(0.0, 1.0 + eps) - loss(0.0, 1.0 - eps)) / (2 * eps)
+    fd_t0 = (loss(eps, 1.0) - loss(-eps, 1.0)) / (2 * eps)
+    np.testing.assert_allclose(float(g_t1), fd_t1, rtol=1e-2)
+    np.testing.assert_allclose(float(g_t0), fd_t0, rtol=1e-2)
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_grid_interior_cotangents(method):
+    # weighted multi-observation loss: every interior grid row k >= 1 must
+    # receive <g_k, f(z_k, t_k)>, and row 0 the swept-adjoint boundary
+    # term with the identity row subtracted
+    gradient, solver = CONFIGS[method]
+    controller = ConstantSteps(8)
+    ts = jnp.linspace(0.0, 1.0, 5)
+    w = jnp.array([0.3, 1.0, -0.5, 2.0, 0.7])
+
+    def loss_ts(ts_):
+        traj, _ = gradient.integrate(_f, PARAMS, Z0, ts_, solver,
+                                     controller, True)
+        return jnp.sum(w[:, None] * traj ** 2)
+
+    def loss_z0(z):
+        traj, _ = gradient.integrate(_f, PARAMS, z, ts, solver,
+                                     controller)
+        return jnp.sum(w[:, None] * traj ** 2)
+
+    g_ts = jax.grad(loss_ts)(ts)
+    traj, _ = gradient.integrate(_f, PARAMS, Z0, ts, solver, controller)
+    for k in range(1, 5):
+        want = jnp.vdot(2.0 * w[k] * traj[k], _f(PARAMS, traj[k], ts[k]))
+        np.testing.assert_allclose(float(g_ts[k]), float(want), rtol=1e-6,
+                                   err_msg=f"row {k}")
+    a_t0 = jax.grad(loss_z0)(Z0) - 2.0 * w[0] * Z0
+    want_0 = -jnp.vdot(a_t0, _f(PARAMS, Z0, ts[0]))
+    np.testing.assert_allclose(float(g_ts[0]), float(want_0), rtol=1e-6)
+
+
+def test_methods_agree_on_bound_gradients():
+    # cross-method agreement on the same fixed grid: the four custom_vjps
+    # implement one convention, not four
+    controller = ConstantSteps(32)
+    grads = {}
+    for name, (gradient, solver) in CONFIGS.items():
+        g = jax.grad(
+            lambda a, b, gr=gradient, sv=solver: jnp.sum(solve(
+                _f, PARAMS, Z0, a, b, solver=sv, controller=controller,
+                gradient=gr, diff_bounds=True).ys ** 2),
+            argnums=(0, 1))(0.0, 1.0)
+        grads[name] = (float(g[0]), float(g[1]))
+    ref = grads["naive"]
+    for name, g in grads.items():
+        np.testing.assert_allclose(g, ref, rtol=5e-3, err_msg=name)
+
+
+def test_diff_bounds_off_keeps_zero_cotangents():
+    # the default path is unchanged: without the flag, bound gradients
+    # stay identically zero (the pre-PR behavior callers may rely on)
+    g_t0, g_t1 = jax.grad(
+        lambda a, b: jnp.sum(solve(
+            _f, PARAMS, Z0, a, b, solver=ALF(),
+            controller=ConstantSteps(8), gradient=MALI()).ys ** 2),
+        argnums=(0, 1))(0.0, 1.0)
+    assert float(g_t0) == 0.0 and float(g_t1) == 0.0
+
+
+def test_diff_bounds_validation():
+    with pytest.raises(ValueError, match="fixed observation grid"):
+        solve(_f, PARAMS, Z0, 0.0, 1.0, solver=ALF(),
+              controller=ConstantSteps(4), gradient=MALI(),
+              saveat=SaveAt(steps=True), diff_bounds=True)
+    with pytest.raises(ValueError, match="Sharded"):
+        solve(_f, PARAMS, jnp.tile(Z0, (4, 1)), 0.0, 1.0, solver=ALF(),
+              controller=ConstantSteps(4), gradient=MALI(),
+              batching=Sharded(axis="data", inner=Lockstep()),
+              diff_bounds=True)
+
+
+def test_diff_bounds_observation_grid_through_solve():
+    # the public solve() front door with a SaveAt grid still solves with
+    # diff_bounds=True (the grid rows' cotangent path is exercised in
+    # test_grid_interior_cotangents via integrate directly)
+    ts = np.linspace(0.0, 1.0, 4)
+    s = solve(_f, PARAMS, Z0, solver=ALF(), controller=ConstantSteps(8),
+              gradient=MALI(), saveat=SaveAt(ts=ts), diff_bounds=True)
+    assert np.all(np.isfinite(np.asarray(s.ys)))

@@ -450,3 +450,34 @@ def test_event_validation():
         solve(_decay, EV_PARAMS, jnp.ones((4, 3)), 0.0, 1.0, solver=ALF(),
               controller=ConstantSteps(4), gradient=MALI(), event=EV,
               batching=Lockstep())
+
+
+@pytest.mark.parametrize("method", sorted(CONFIGS))
+def test_event_time_gradient_matches_ift(method):
+    # Stats.event_time is differentiable via the implicit function
+    # theorem: c(z(t*; theta), t*) = 0 with z = z0 e^{-a t} and
+    # c = z[0] - 0.5 gives t* = ln(2 z0[0]) / a, so
+    # dt*/da = -t*/a and dt*/dz0 = (1/(a z0[0]), 0, 0).
+    gradient, solver = CONFIGS[method]
+    controller = ConstantSteps(96)
+
+    def t_star(p, z):
+        s = solve(_decay, p, z, 0.0, 3.0, solver=solver,
+                  controller=controller, gradient=gradient, event=EV)
+        return s.stats.event_time
+
+    g_p, g_z = jax.grad(t_star, argnums=(0, 1))(EV_PARAMS, EV_Z0)
+    np.testing.assert_allclose(float(g_p["a"]), -T_CROSS / EV_A, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(g_z),
+                               [1.0 / EV_A, 0.0, 0.0], atol=2e-2)
+
+
+def test_event_time_gradient_zero_when_unfired():
+    # the IFT correction is gated on event_fired: an event-free span keeps
+    # the plain span endpoint with no parameter gradient
+    def t_end(p):
+        s = solve(_decay, p, EV_Z0, 0.0, 0.2, solver=ALF(),
+                  controller=ConstantSteps(16), gradient=MALI(), event=EV)
+        return s.stats.event_time
+
+    assert float(jax.grad(t_end)(EV_PARAMS)["a"]) == 0.0
